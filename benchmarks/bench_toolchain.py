@@ -1,0 +1,58 @@
+"""Toolchain overheads (paper §4 'performance of the toolchain').
+
+Measures, as a function of program length: verifier latency, XLA JIT compile
+latency (the paper's 152 us uBPF figure is the analogue), and interpreter
+dispatch overhead per instruction."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import CsdTier, NvmCsd
+from repro.core.programs import Instruction, OpCode, Program
+from repro.core.verifier import verify_program
+from repro.core.vm import jit_program
+from repro.zns import ZonedDevice
+
+
+def chain_program(n_alu: int) -> Program:
+    insns = tuple(Instruction(OpCode.ADD, 1) for _ in range(n_alu)) + (
+        Instruction(OpCode.CMP_GT, 0), Instruction(OpCode.RED_COUNT))
+    return Program("int32", insns, name=f"chain{n_alu}")
+
+
+def main() -> list[str]:
+    rows = []
+    n_pages, page_elems = 256, 1024
+    dev = ZonedDevice(num_zones=1, zone_bytes=n_pages * 4096, block_bytes=4096)
+    rng = np.random.default_rng(0)
+    dev.zone_append(0, rng.integers(0, 2**31, n_pages * page_elems,
+                                    dtype=np.int32))
+    csd = NvmCsd(dev)
+    for n_alu in (0, 4, 16, 64):
+        prog = chain_program(n_alu)
+        t = time.perf_counter()
+        for _ in range(50):
+            verify_program(prog, page_elems=page_elems, n_pages=n_pages)
+        verify_us = (time.perf_counter() - t) / 50 * 1e6
+
+        t = time.perf_counter()
+        jp = jit_program(prog, n_pages, page_elems)
+        jit_us = (time.perf_counter() - t) * 1e6
+
+        s_int = csd.nvm_cmd_bpf_run(prog, 0, tier=CsdTier.INTERP)
+        s_jit = csd.nvm_cmd_bpf_run(prog, 0, tier=CsdTier.JIT)
+        interp_per_insn_ns = s_int.exec_seconds / s_int.insns_executed * 1e9
+        rows.append(
+            f"toolchain_n{n_alu + 2},{jit_us:.0f},"
+            f"verify_us={verify_us:.1f};interp_exec_us={s_int.exec_seconds * 1e6:.0f};"
+            f"jit_exec_us={s_jit.exec_seconds * 1e6:.0f};"
+            f"interp_ns_per_insn={interp_per_insn_ns:.0f}"
+        )
+    return rows
+
+
+if __name__ == "__main__":
+    for r in main():
+        print(r)

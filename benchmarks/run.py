@@ -1,0 +1,49 @@
+"""Benchmark driver: one function per paper table/figure + the roofline.
+
+Prints ``name,us_per_call,derived`` CSV lines. Scaled-down sizes by default
+(CI-friendly on 1 CPU core); pass --full for the paper's exact 256 MiB zone.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="paper-exact sizes (256 MiB zone, 5 runs)")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated subset: filter,toolchain,pushdown,"
+                         "checkpoint,paged_attn,roofline")
+    args = ap.parse_args()
+
+    from benchmarks import (bench_checkpoint, bench_filter, bench_paged_attn,
+                            bench_pushdown, bench_toolchain, roofline)
+
+    suites = {
+        "filter": lambda: bench_filter.main(
+            zone_mib=256 if args.full else 32, runs=5 if args.full else 3),
+        "toolchain": bench_toolchain.main,
+        "pushdown": bench_pushdown.main,
+        "checkpoint": bench_checkpoint.main,
+        "paged_attn": bench_paged_attn.main,
+        "roofline": roofline.main,
+    }
+    chosen = args.only.split(",") if args.only else list(suites)
+
+    print("name,us_per_call,derived")
+    failures = 0
+    for name in chosen:
+        try:
+            for row in suites[name]():
+                print(row)
+        except Exception:
+            failures += 1
+            print(f"{name},ERROR,{traceback.format_exc(limit=1)!r}")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,69 @@
+"""Serving with a zoned KV cache: batched decode over the zone pool.
+
+Demonstrates the ZNS->serving mapping: sequences allocate KV zones from a
+shared pool (append-only writes at the zone write pointer), attention runs
+*in place* over the pool via the Pallas paged-attention kernel, and eviction
+is a host-managed zone reset. Three request waves with evictions show
+fragmentation-free reuse.
+
+    PYTHONPATH=src python examples/serve_zoned_kv.py
+"""
+import numpy as np
+import jax.numpy as jnp
+
+from repro.kernels.paged_attn.ref import paged_attention_ref
+from repro.serve.kv_zones import KVZonePool
+
+KV_HEADS, HEADS, HEAD_DIM = 2, 8, 64
+
+
+def decode_wave(pool, seq_ids, steps, rng):
+    """Simulate `steps` decode steps for a batch of sequences."""
+    for _ in range(steps):
+        for sid in seq_ids:
+            k_tok = jnp.asarray(rng.standard_normal((KV_HEADS, HEAD_DIM)),
+                                jnp.float32)
+            v_tok = jnp.asarray(rng.standard_normal((KV_HEADS, HEAD_DIM)),
+                                jnp.float32)
+            pool.append(sid, k_tok, v_tok)
+        q = jnp.asarray(rng.standard_normal((len(seq_ids), HEADS, HEAD_DIM)),
+                        jnp.float32)
+        out = pool.attend(seq_ids, q)
+        # cross-check against the jnp oracle
+        tab, lengths = pool.zone_table(seq_ids)
+        ref = paged_attention_ref(q, pool.k, pool.v, tab, lengths)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   rtol=2e-5, atol=2e-5)
+    return out
+
+
+def main():
+    rng = np.random.default_rng(0)
+    pool = KVZonePool(num_zones=24, zone_len=16, kv_heads=KV_HEADS,
+                      head_dim=HEAD_DIM, max_zones_per_seq=4,
+                      dtype=jnp.float32)
+
+    print("wave 1: four sequences decode 40 tokens each")
+    for sid in range(4):
+        pool.add_sequence(sid)
+    decode_wave(pool, [0, 1, 2, 3], 40, rng)
+    print(f"  pool utilization {pool.utilization():.0%}, "
+          f"stats={pool.stats}")
+
+    print("wave 2: evict two sequences (host-managed zone reset)")
+    pool.evict(0)
+    pool.evict(2)
+    print(f"  pool utilization {pool.utilization():.0%}, "
+          f"zones reset so far: {pool.stats['zones_reset']}")
+
+    print("wave 3: four NEW sequences reuse the reclaimed zones")
+    for sid in range(10, 14):
+        pool.add_sequence(sid)
+    decode_wave(pool, [10, 11, 12, 13], 30, rng)
+    print(f"  pool utilization {pool.utilization():.0%}, "
+          f"stats={pool.stats}")
+    print("paged attention matched the oracle at every step — done")
+
+
+if __name__ == "__main__":
+    main()

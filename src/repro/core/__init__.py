@@ -1,0 +1,28 @@
+"""ZCSD core: the paper's contribution as a composable library.
+
+  * :mod:`repro.core.programs` — the offload program IR (eBPF analogue)
+  * :mod:`repro.core.verifier` — bounded-execution / memory-safety verifier
+  * :mod:`repro.core.vm`       — interpreter + XLA-JIT execution tiers
+  * :mod:`repro.core.csd`      — the NvmCsd device (two-part API, stats)
+"""
+from repro.core.programs import (
+    Instruction,
+    OpCode,
+    Program,
+    field_reduce,
+    filter_count,
+    filter_select,
+    filter_sum,
+    histogram,
+)
+from repro.core.verifier import VerifierLimits, VerifyError, verify_program
+from repro.core.vm import OffloadResult, interpret_program, jit_program, run_oracle
+from repro.core.csd import CsdTier, NvmCsd, OffloadStats
+
+__all__ = [
+    "Instruction", "OpCode", "Program",
+    "filter_count", "filter_sum", "filter_select", "histogram", "field_reduce",
+    "VerifyError", "VerifierLimits", "verify_program",
+    "OffloadResult", "interpret_program", "jit_program", "run_oracle",
+    "NvmCsd", "CsdTier", "OffloadStats",
+]

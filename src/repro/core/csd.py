@@ -1,0 +1,248 @@
+"""The ZCSD device: zoned storage + verified offload execution.
+
+Mirrors the paper's two-part ``NvmCsd`` API (Listing 1):
+
+  part-i  (app <-> ZCSD): :meth:`NvmCsd.nvm_cmd_bpf_run` submits a program and
+          executes it synchronously; :meth:`NvmCsd.nvm_cmd_bpf_result` fetches
+          the result. :meth:`NvmCsd.nvm_cmd_bpf_run_async` is the asynchronous
+          extension the paper lists as future work.
+  part-ii (program <-> device hooks): :meth:`bpf_read` (bounds-checked page
+          read), :meth:`bpf_return_data`, :meth:`bpf_get_lba_size`,
+          :meth:`bpf_get_mem_info` — the environment the interpreter tier
+          executes against.
+
+The device keeps the paper's per-offload statistics: runtime, number of
+instructions executed, JIT time, and the amount of data movement saved.
+
+Workflow lifecycle (paper Figure 1): (1) app calls the API with a program;
+(2,3) device reads the necessary blocks from the ZNS zone; (4,5) program is
+verified and JITed; (6) only the (reduced) result returns to the app.
+"""
+from __future__ import annotations
+
+import concurrent.futures
+import time
+from dataclasses import dataclass, field
+from typing import Optional
+
+import numpy as np
+
+from repro.core.programs import OpCode, Program
+from repro.core.verifier import VerifierLimits, verify_program, verify_zone_access
+from repro.core.vm import (
+    JittedProgram,
+    OffloadResult,
+    interpret_program,
+    jit_program,
+    run_oracle,
+)
+from repro.zns.device import ZonedDevice
+
+__all__ = ["NvmCsd", "OffloadStats", "CsdTier"]
+
+TIERS = ("interp", "jit", "kernel")
+
+
+@dataclass
+class OffloadStats:
+    """Per-offload statistics (paper §3: runtime, #insns, JIT time, data
+    movement saved)."""
+
+    program: str
+    tier: str
+    zone_id: int
+    pages: int
+    bytes_read: int = 0               # storage -> compute (stayed inside device)
+    bytes_returned: int = 0           # device -> host (crossed the link)
+    insns_verified: int = 0
+    insns_executed: int = 0
+    verify_seconds: float = 0.0
+    jit_seconds: float = 0.0
+    exec_seconds: float = 0.0
+
+    @property
+    def movement_saved_bytes(self) -> int:
+        """Bytes that did NOT cross the host link thanks to the offload."""
+        return max(self.bytes_read - self.bytes_returned, 0)
+
+    @property
+    def reduction_factor(self) -> float:
+        return self.bytes_read / max(self.bytes_returned, 1)
+
+
+class CsdTier:
+    INTERP = "interp"
+    JIT = "jit"
+    KERNEL = "kernel"
+
+
+class NvmCsd:
+    """A Zoned Computational Storage Device.
+
+    ``pages_per_read`` controls the device-internal streaming granularity
+    (paper default: one 4 KiB block per access).
+    """
+
+    def __init__(
+        self,
+        device: ZonedDevice,
+        *,
+        default_tier: str = CsdTier.JIT,
+        pages_per_read: int = 1,
+        limits: VerifierLimits = VerifierLimits(),
+        max_workers: int = 2,
+    ):
+        self.device = device
+        self.default_tier = default_tier
+        self.pages_per_read = int(pages_per_read)
+        self.limits = limits
+        self._result: Optional[OffloadResult] = None
+        self._jit_cache: dict[tuple, JittedProgram] = {}
+        self._pool = concurrent.futures.ThreadPoolExecutor(max_workers=max_workers)
+        self.history: list[OffloadStats] = []
+
+    # ------------------------------------------------------- part-ii hooks
+    def bpf_get_lba_size(self) -> int:
+        return self.device.lba_size
+
+    def bpf_get_mem_info(self) -> tuple[int, int]:
+        """(scratch bytes available, block bytes) — the device-memory budget
+        an offloaded program may assume (maps to the VMEM budget for the
+        kernel tier)."""
+        return 16 * 1024 * 1024, self.device.lba_size  # 16 MiB ~ one core's VMEM
+
+    def bpf_read(self, zone_id: int, block_off: int, n_blocks: int) -> np.ndarray:
+        """Bounds-checked read used by the interpreter tier (device enforces
+        the write-pointer bound; the verifier proved the static extent)."""
+        return self.device.read_blocks(zone_id, block_off, n_blocks)
+
+    def bpf_return_data(self, data: OffloadResult) -> None:
+        self._result = data
+
+    # --------------------------------------------------------- part-i API
+    def nvm_cmd_bpf_run(
+        self,
+        program: Program,
+        zone_id: int,
+        *,
+        block_off: int = 0,
+        n_blocks: Optional[int] = None,
+        tier: Optional[str] = None,
+    ) -> OffloadStats:
+        """Verify + execute ``program`` against a zone extent. Synchronous:
+        returns once the (reduced) result is available via
+        :meth:`nvm_cmd_bpf_result`."""
+        tier = tier or self.default_tier
+        zone = self.device.zone(zone_id)
+        if n_blocks is None:
+            n_blocks = zone.write_pointer - block_off
+
+        dtype = np.dtype(program.input_dtype)
+        block_bytes = self.device.block_bytes
+        page_elems = block_bytes * self.pages_per_read // dtype.itemsize
+        if block_bytes * self.pages_per_read % dtype.itemsize:
+            raise ValueError("block size not a multiple of element size")
+        if n_blocks % self.pages_per_read:
+            raise ValueError(
+                f"extent of {n_blocks} blocks not a multiple of read granularity "
+                f"{self.pages_per_read}"
+            )
+        n_pages = n_blocks // self.pages_per_read
+
+        # steps 4: verify (static program + the zone extent it may touch)
+        t0 = time.perf_counter()
+        insns_verified = verify_program(
+            program, page_elems=page_elems, n_pages=n_pages, limits=self.limits
+        )
+        verify_zone_access(
+            zone_write_pointer=zone.write_pointer, block_off=block_off,
+            n_blocks=n_blocks,
+        )
+        verify_seconds = time.perf_counter() - t0
+
+        stats = OffloadStats(
+            program=program.name, tier=tier, zone_id=zone_id, pages=n_pages,
+            insns_verified=insns_verified, verify_seconds=verify_seconds,
+            bytes_read=n_blocks * block_bytes,
+        )
+
+        if tier == CsdTier.INTERP:
+            def read_page(p: int) -> np.ndarray:
+                return self.bpf_read(
+                    zone_id, block_off + p * self.pages_per_read, self.pages_per_read
+                )
+            result = interpret_program(program, read_page, n_pages, page_elems)
+        elif tier == CsdTier.JIT:
+            key = (program, n_pages, page_elems)
+            jp = self._jit_cache.get(key)
+            if jp is None:
+                jp = jit_program(program, n_pages, page_elems)
+                self._jit_cache[key] = jp
+                stats.jit_seconds = jp.compile_seconds
+            # steps 2,3: device DMA of the zone extent into device DRAM
+            raw = self.device.read_blocks(zone_id, block_off, n_blocks)
+            pages = np.frombuffer(raw.tobytes(), dtype=dtype).reshape(n_pages, page_elems)
+            t0 = time.perf_counter()
+            value = jp(pages)
+            value = tuple(np.asarray(v) for v in value) if isinstance(value, tuple) \
+                else np.asarray(value)
+            exec_seconds = time.perf_counter() - t0
+            nbytes = (sum(v.nbytes for v in value) if isinstance(value, tuple)
+                      else value.nbytes)
+            result = OffloadResult(value, nbytes, n_pages,
+                                   insns_verified, exec_seconds, stats.jit_seconds)
+        elif tier == CsdTier.KERNEL:
+            # Pallas tier (TPU target; interpret-mode on CPU). Only the
+            # reduce-style terminals are kernelized; verifier-admitted
+            # programs with other terminals fall back to the JIT tier.
+            from repro.kernels.zone_filter import ops as zf_ops
+            if not zf_ops.kernelizable(program):
+                return self.nvm_cmd_bpf_run(
+                    program, zone_id, block_off=block_off, n_blocks=n_blocks,
+                    tier=CsdTier.JIT,
+                )
+            raw = self.device.read_blocks(zone_id, block_off, n_blocks)
+            pages = np.frombuffer(raw.tobytes(), dtype=dtype).reshape(n_pages, page_elems)
+            t0 = time.perf_counter()
+            value = np.asarray(zf_ops.run_program_kernel(program, pages))
+            exec_seconds = time.perf_counter() - t0
+            result = OffloadResult(value, value.nbytes, n_pages,
+                                   insns_verified, exec_seconds)
+        else:
+            raise ValueError(f"unknown tier {tier!r}")
+
+        stats.insns_executed = result.insns_executed
+        stats.exec_seconds = result.exec_seconds
+        stats.bytes_returned = result.bytes_returned
+        self.bpf_return_data(result)
+        self.history.append(stats)
+        return stats
+
+    def nvm_cmd_bpf_result(self) -> object:
+        """Fetch the last offload's result (paper API line 8)."""
+        if self._result is None:
+            raise RuntimeError("no offload result available")
+        return self._result.value
+
+    # ------------------------------------------------- async extension
+    def nvm_cmd_bpf_run_async(
+        self, program: Program, zone_id: int, **kw
+    ) -> concurrent.futures.Future:
+        """Asynchronous execution (the paper's stated future extension)."""
+        return self._pool.submit(self.nvm_cmd_bpf_run, program, zone_id, **kw)
+
+    # ---------------------------------------------------------- helpers
+    def run_and_fetch(self, program: Program, zone_id: int, **kw):
+        stats = self.nvm_cmd_bpf_run(program, zone_id, **kw)
+        return self.nvm_cmd_bpf_result(), stats
+
+    def oracle(self, program: Program, zone_id: int, *, block_off: int = 0,
+               n_blocks: Optional[int] = None):
+        """Host-side reference execution (reads the WHOLE extent over the
+        link — the "no CSD" baseline)."""
+        zone = self.device.zone(zone_id)
+        if n_blocks is None:
+            n_blocks = zone.write_pointer - block_off
+        raw = self.device.read_blocks(zone_id, block_off, n_blocks)
+        return run_oracle(program, np.frombuffer(raw.tobytes(),
+                                                 dtype=np.dtype(program.input_dtype)))

@@ -1,0 +1,412 @@
+"""Execution tiers for verified offload programs.
+
+The paper evaluates three ways to execute the same offloaded computation
+(Figure 2); we reproduce all three, plus the TPU-native tier the paper lists
+as future hardware backends:
+
+  tier "native"     hand-written host code (paper: SPDK userspace loop)
+                    -> :func:`run_oracle` (vectorized numpy; also the test
+                    oracle for every other tier)
+  tier "interp"     stack-machine VM, one instruction at a time, per-access
+                    memory bounds checks (paper: uBPF without JIT)
+                    -> :func:`interpret_program`
+  tier "jit"        program compiled before execution (paper: uBPF JIT/x86;
+                    here: XLA via jax.jit), page-streamed with lax.scan
+                    -> :func:`jit_program`
+  tier "kernel"     Pallas TPU kernel streaming zone blocks HBM->VMEM
+                    (repro.kernels.zone_filter / zone_reduce; wired up by
+                    repro.core.csd.NvmCsd)
+
+All tiers process the zone at **page granularity** — the paper's conservative
+design for small CSD DRAM, which on TPU becomes the VMEM-residency constraint.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Callable, Optional
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.programs import (
+    CMP_OPS,
+    Instruction,
+    OpCode,
+    Program,
+)
+
+__all__ = [
+    "OffloadResult",
+    "run_oracle",
+    "interpret_program",
+    "jit_program",
+    "JittedProgram",
+]
+
+
+# ---------------------------------------------------------------------------
+# shared semantics helpers
+# ---------------------------------------------------------------------------
+
+_SUM_WIDEN = {
+    np.dtype(np.int32): np.int64, np.dtype(np.int64): np.int64,
+    np.dtype(np.uint32): np.int64,
+    np.dtype(np.float32): np.float64, np.dtype(np.float64): np.float64,
+}
+
+
+def _minmax_identity(op: OpCode, dtype: np.dtype):
+    info = np.iinfo(dtype) if np.issubdtype(dtype, np.integer) else np.finfo(dtype)
+    return info.max if op == OpCode.RED_MIN else info.min
+
+
+def _apply_alu_np(x: np.ndarray, insn: Instruction) -> np.ndarray:
+    op, imm = insn.op, insn.imm
+    dt = x.dtype
+    with np.errstate(over="ignore"):
+        if op == OpCode.ADD:
+            return (x + dt.type(imm)).astype(dt)
+        if op == OpCode.SUB:
+            return (x - dt.type(imm)).astype(dt)
+        if op == OpCode.MUL:
+            return (x * dt.type(imm)).astype(dt)
+        if op == OpCode.AND:
+            return x & dt.type(imm)
+        if op == OpCode.OR:
+            return x | dt.type(imm)
+        if op == OpCode.XOR:
+            return x ^ dt.type(imm)
+        if op == OpCode.SHL:
+            return (x << imm).astype(dt)
+        if op == OpCode.SHR:
+            return (x >> imm).astype(dt)
+        if op == OpCode.MOD:
+            return (x % dt.type(imm)).astype(dt)
+        if op == OpCode.ABS:
+            return np.abs(x)
+        if op == OpCode.NEG:
+            return (-x).astype(dt)
+    raise AssertionError(op)
+
+
+def _apply_cmp_np(x: np.ndarray, insn: Instruction) -> np.ndarray:
+    imm = x.dtype.type(insn.imm)
+    return {
+        OpCode.CMP_GT: x > imm, OpCode.CMP_GE: x >= imm,
+        OpCode.CMP_LT: x < imm, OpCode.CMP_LE: x <= imm,
+        OpCode.CMP_EQ: x == imm, OpCode.CMP_NE: x != imm,
+    }[insn.op]
+
+
+def _hist_bin_np(x: np.ndarray, lo, hi, bins: int) -> tuple[np.ndarray, np.ndarray]:
+    in_range = (x >= lo) & (x < hi)
+    # use float64 bin math so int and float streams agree across tiers
+    idx = np.floor((x.astype(np.float64) - lo) * bins / (hi - lo)).astype(np.int64)
+    idx = np.clip(idx, 0, bins - 1)
+    return idx, in_range
+
+
+@dataclass
+class OffloadResult:
+    """What travels back over the link -- the whole point of the paper."""
+
+    value: object                      # scalar, histogram array, or (values, count)
+    bytes_returned: int
+    pages_processed: int
+    insns_executed: int
+    exec_seconds: float
+    compile_seconds: float = 0.0
+
+
+# ---------------------------------------------------------------------------
+# tier "native": vectorized numpy — doubles as the semantic oracle for tests
+# ---------------------------------------------------------------------------
+
+def run_oracle(program: Program, data: np.ndarray) -> object:
+    """Vectorized reference semantics over the whole (typed) zone contents."""
+    x = np.asarray(data, dtype=np.dtype(program.input_dtype)).reshape(-1)
+    records = None
+    mask = np.ones(x.shape, dtype=bool)
+    for insn in program.insns[:-1]:
+        if insn.op == OpCode.FIELD:
+            stride, index = insn.imm
+            records = x.reshape(-1, stride)
+            x = records[:, index]
+            mask = np.ones(x.shape, dtype=bool)
+        elif insn.op in CMP_OPS:
+            mask &= _apply_cmp_np(x, insn)
+        else:
+            x = _apply_alu_np(x, insn)
+    term = program.terminal
+    if term.op == OpCode.SELECT_REC:
+        cap = program.select_capacity
+        sel = records[mask]
+        out = np.zeros((cap, records.shape[1]), records.dtype)
+        n = min(sel.shape[0], cap)
+        out[:n] = sel[:n]
+        return out, np.int64(sel.shape[0])
+    if term.op == OpCode.RED_COUNT:
+        return np.int64(mask.sum())
+    if term.op == OpCode.RED_SUM:
+        widen = _SUM_WIDEN[x.dtype]
+        return widen(x[mask].astype(widen).sum())
+    if term.op in (OpCode.RED_MIN, OpCode.RED_MAX):
+        ident = x.dtype.type(_minmax_identity(term.op, x.dtype))
+        sel = x[mask]
+        if sel.size == 0:
+            return ident
+        return sel.min() if term.op == OpCode.RED_MIN else sel.max()
+    if term.op == OpCode.RED_HIST:
+        lo, hi, bins = term.imm
+        idx, in_range = _hist_bin_np(x, lo, hi, bins)
+        return np.bincount(idx[mask & in_range], minlength=bins).astype(np.int64)
+    if term.op == OpCode.SELECT:
+        cap = program.select_capacity
+        sel = x[mask]
+        out = np.zeros(cap, dtype=x.dtype)
+        n = min(sel.size, cap)
+        out[:n] = sel[:n]
+        return out, np.int64(sel.size)   # count reports ALL matches (truncation visible)
+    raise AssertionError(term)
+
+
+# ---------------------------------------------------------------------------
+# tier "interp": stack-machine VM (paper's uBPF-without-JIT)
+# ---------------------------------------------------------------------------
+
+def interpret_program(
+    program: Program,
+    read_page: Callable[[int], np.ndarray],
+    n_pages: int,
+    page_elems: int,
+) -> OffloadResult:
+    """One instruction at a time, one page at a time, with per-access memory
+    bounds checks -- deliberately mirrors the uBPF stack machine the paper
+    benchmarks as its slow tier. ``read_page`` is the device's bounds-checked
+    ``bpf_read`` hook."""
+    dtype = np.dtype(program.input_dtype)
+    term = program.terminal
+    # accumulator init
+    count = np.int64(0)
+    acc_sum = _SUM_WIDEN[dtype](0)
+    acc_mm = dtype.type(_minmax_identity(term.op, dtype)) \
+        if term.op in (OpCode.RED_MIN, OpCode.RED_MAX) else None
+    hist = np.zeros(term.imm[2], dtype=np.int64) if term.op == OpCode.RED_HIST else None
+    sel_buf = np.zeros(program.select_capacity, dtype=dtype) \
+        if term.op == OpCode.SELECT else None
+    rec_stride = program.insns[0].imm[0] if (
+        term.op == OpCode.SELECT_REC) else None
+    rec_buf = np.zeros((program.select_capacity, rec_stride), dtype=dtype) \
+        if term.op == OpCode.SELECT_REC else None
+    sel_n = np.int64(0)
+
+    insns_executed = 0
+    t0 = time.perf_counter()
+    for p in range(n_pages):
+        page = read_page(p)
+        x = np.frombuffer(page.tobytes(), dtype=dtype)
+        # explicit bounds check per access (the uBPF interp overhead the
+        # paper attributes its slow tier to)
+        if x.size != page_elems:
+            raise IndexError(
+                f"page {p}: access of {x.size} elements outside page bound {page_elems}"
+            )
+        mask = np.ones(x.shape, dtype=bool)
+        records = None
+        for insn in program.insns[:-1]:
+            insns_executed += 1
+            if insn.op == OpCode.FIELD:
+                stride, index = insn.imm
+                if x.size % stride != 0 or index >= stride:  # bounds check
+                    raise IndexError(f"FIELD access out of record bounds on page {p}")
+                records = x.reshape(-1, stride)
+                x = records[:, index]
+                mask = np.ones(x.shape, dtype=bool)
+            elif insn.op in CMP_OPS:
+                mask &= _apply_cmp_np(x, insn)
+            else:
+                x = _apply_alu_np(x, insn)
+        insns_executed += 1  # the terminal
+        if term.op == OpCode.RED_COUNT:
+            count += mask.sum()
+        elif term.op == OpCode.RED_SUM:
+            acc_sum += x[mask].astype(acc_sum.dtype).sum()
+        elif term.op == OpCode.RED_MIN:
+            sel = x[mask]
+            if sel.size:
+                acc_mm = min(acc_mm, sel.min())
+        elif term.op == OpCode.RED_MAX:
+            sel = x[mask]
+            if sel.size:
+                acc_mm = max(acc_mm, sel.max())
+        elif term.op == OpCode.RED_HIST:
+            lo, hi, bins = term.imm
+            idx, in_range = _hist_bin_np(x, lo, hi, bins)
+            hist += np.bincount(idx[mask & in_range], minlength=bins).astype(np.int64)
+        elif term.op == OpCode.SELECT:
+            sel = x[mask]
+            space = program.select_capacity - int(sel_n)
+            if space > 0 and sel.size:
+                take = min(space, sel.size)
+                # bounds-checked write into the return buffer
+                sel_buf[int(sel_n) : int(sel_n) + take] = sel[:take]
+            sel_n += sel.size
+        elif term.op == OpCode.SELECT_REC:
+            sel = records[mask]
+            space = program.select_capacity - int(sel_n)
+            if space > 0 and sel.shape[0]:
+                take = min(space, sel.shape[0])
+                rec_buf[int(sel_n) : int(sel_n) + take] = sel[:take]
+            sel_n += sel.shape[0]
+    dt_exec = time.perf_counter() - t0
+
+    if term.op == OpCode.RED_COUNT:
+        value, nbytes = count, 8
+    elif term.op == OpCode.RED_SUM:
+        value, nbytes = acc_sum, 8
+    elif term.op in (OpCode.RED_MIN, OpCode.RED_MAX):
+        value, nbytes = acc_mm, dtype.itemsize
+    elif term.op == OpCode.RED_HIST:
+        value, nbytes = hist, hist.nbytes
+    elif term.op == OpCode.SELECT_REC:
+        value, nbytes = (rec_buf, sel_n), rec_buf.nbytes + 8
+    else:
+        value, nbytes = (sel_buf, sel_n), sel_buf.nbytes + 8
+    return OffloadResult(value, nbytes, n_pages, insns_executed, dt_exec)
+
+
+# ---------------------------------------------------------------------------
+# tier "jit": XLA-compiled, page-streamed with lax.scan (paper's uBPF-JIT)
+# ---------------------------------------------------------------------------
+
+@dataclass
+class JittedProgram:
+    fn: Callable                     # (pages[n_pages, page_elems]) -> result
+    compile_seconds: float           # the paper's "JIT time" statistic
+    n_pages: int
+    page_elems: int
+    program: Program
+
+    def __call__(self, pages) -> object:
+        return self.fn(pages)
+
+
+def _stream_mask_jnp(program: Program, x: jnp.ndarray):
+    mask = jnp.ones(x.shape, dtype=bool)
+    for insn in program.insns[:-1]:
+        op, imm = insn.op, insn.imm
+        if op == OpCode.FIELD:
+            stride, index = imm
+            x = x.reshape(-1, stride)[:, index]
+            mask = jnp.ones(x.shape, dtype=bool)
+        elif op in CMP_OPS:
+            imm_t = jnp.asarray(imm, dtype=x.dtype)
+            mask &= {
+                OpCode.CMP_GT: x > imm_t, OpCode.CMP_GE: x >= imm_t,
+                OpCode.CMP_LT: x < imm_t, OpCode.CMP_LE: x <= imm_t,
+                OpCode.CMP_EQ: x == imm_t, OpCode.CMP_NE: x != imm_t,
+            }[op]
+        elif op == OpCode.ABS:
+            x = jnp.abs(x)
+        elif op == OpCode.NEG:
+            x = -x
+        else:
+            imm_t = jnp.asarray(imm, dtype=x.dtype)
+            x = {
+                OpCode.ADD: lambda: x + imm_t, OpCode.SUB: lambda: x - imm_t,
+                OpCode.MUL: lambda: x * imm_t, OpCode.AND: lambda: x & imm_t,
+                OpCode.OR: lambda: x | imm_t, OpCode.XOR: lambda: x ^ imm_t,
+                OpCode.SHL: lambda: x << imm, OpCode.SHR: lambda: x >> imm,
+                OpCode.MOD: lambda: x % imm_t,
+            }[op]()
+    return x, mask
+
+
+def jit_program(
+    program: Program,
+    n_pages: int,
+    page_elems: int,
+    *,
+    donate: bool = False,
+) -> JittedProgram:
+    """Compile ``program`` to XLA. The compiled function scans the zone one
+    page at a time (bounded working set — the VMEM/CSD-DRAM constraint) and
+    carries only the reduction accumulator."""
+    dtype = np.dtype(program.input_dtype)
+    term = program.terminal
+    cap = program.select_capacity
+
+    def init_carry():
+        if term.op == OpCode.RED_COUNT:
+            return jnp.zeros((), jnp.int64)
+        if term.op == OpCode.RED_SUM:
+            return jnp.zeros((), _SUM_WIDEN[dtype])
+        if term.op in (OpCode.RED_MIN, OpCode.RED_MAX):
+            return jnp.asarray(_minmax_identity(term.op, dtype), dtype)
+        if term.op == OpCode.RED_HIST:
+            return jnp.zeros((term.imm[2],), jnp.int64)
+        if term.op == OpCode.SELECT:
+            return (jnp.zeros((cap + 1,), dtype), jnp.zeros((), jnp.int64))
+        if term.op == OpCode.SELECT_REC:
+            stride = program.insns[0].imm[0]
+            return (jnp.zeros((cap + 1, stride), dtype),
+                    jnp.zeros((), jnp.int64))
+        raise AssertionError(term)
+
+    def page_step(carry, page):
+        x, mask = _stream_mask_jnp(program, page)
+        if term.op == OpCode.RED_COUNT:
+            return carry + mask.sum(dtype=jnp.int64), None
+        if term.op == OpCode.RED_SUM:
+            return carry + jnp.where(mask, x, 0).astype(carry.dtype).sum(), None
+        if term.op == OpCode.RED_MIN:
+            ident = jnp.asarray(_minmax_identity(term.op, dtype), dtype)
+            return jnp.minimum(carry, jnp.where(mask, x, ident).min()), None
+        if term.op == OpCode.RED_MAX:
+            ident = jnp.asarray(_minmax_identity(term.op, dtype), dtype)
+            return jnp.maximum(carry, jnp.where(mask, x, ident).max()), None
+        if term.op == OpCode.RED_HIST:
+            lo, hi, bins = term.imm
+            in_range = (x >= lo) & (x < hi)
+            idx = jnp.floor(
+                (x.astype(jnp.float64) - lo) * bins / (hi - lo)
+            ).astype(jnp.int64)
+            idx = jnp.clip(idx, 0, bins - 1)
+            upd = jnp.where(mask & in_range, 1, 0).astype(jnp.int64)
+            return carry.at[idx].add(upd), None
+        if term.op == OpCode.SELECT:
+            buf, n = carry
+            pos = n + jnp.cumsum(mask) - 1
+            ok = mask & (pos < cap)
+            # overflow writes land in the scratch slot [cap]
+            buf = buf.at[jnp.where(ok, pos, cap)].set(x)
+            return (buf, n + mask.sum(dtype=jnp.int64)), None
+        if term.op == OpCode.SELECT_REC:
+            buf, n = carry
+            stride = program.insns[0].imm[0]
+            records = page.reshape(-1, stride)
+            pos = n + jnp.cumsum(mask) - 1
+            ok = mask & (pos < cap)
+            buf = buf.at[jnp.where(ok, pos, cap)].set(records)
+            return (buf, n + mask.sum(dtype=jnp.int64)), None
+        raise AssertionError(term)
+
+    def run(pages):
+        carry, _ = jax.lax.scan(page_step, init_carry(), pages)
+        if term.op in (OpCode.SELECT, OpCode.SELECT_REC):
+            buf, n = carry
+            return buf[:cap], n
+        return carry
+
+    spec = jax.ShapeDtypeStruct((n_pages, page_elems), dtype)
+    t0 = time.perf_counter()
+    # int64 accumulators need 64-bit mode at *trace* time; scope it to the
+    # offload compiler so the model stack keeps JAX's 32-bit defaults.
+    with jax.enable_x64(True):
+        jitted = jax.jit(run, donate_argnums=(0,) if donate else ())
+        compiled = jitted.lower(spec).compile()
+    compile_seconds = time.perf_counter() - t0
+    return JittedProgram(compiled, compile_seconds, n_pages, page_elems, program)

@@ -1,0 +1,7 @@
+from repro.data.pipeline import (
+    PrefetchLoader,
+    ZoneDataPipeline,
+    ZoneDataStore,
+)
+
+__all__ = ["ZoneDataStore", "ZoneDataPipeline", "PrefetchLoader"]

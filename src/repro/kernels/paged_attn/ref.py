@@ -1,0 +1,38 @@
+"""Pure-jnp oracle for zoned-KV paged decode attention."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = ["paged_attention_ref"]
+
+
+def paged_attention_ref(q, k_zones, v_zones, zone_table, lengths):
+    """Flash-decode over a zoned KV cache — reference semantics.
+
+    q:          [B, H, hd]           query for the current token
+    k_zones:    [NZ, ZL, KV, hd]     global zone pool (append-only KV zones)
+    v_zones:    [NZ, ZL, KV, hd]
+    zone_table: [B, MZ] int32        zone ids per sequence (-1 = unused)
+    lengths:    [B] int32            total valid tokens per sequence
+    returns:    [B, H, hd]
+    """
+    B, H, hd = q.shape
+    NZ, ZL, KV, _ = k_zones.shape
+    MZ = zone_table.shape[1]
+    G = H // KV
+
+    # gather each sequence's zones -> a contiguous [B, MZ*ZL, KV, hd] view
+    safe = jnp.maximum(zone_table, 0)                      # [B, MZ]
+    k = k_zones[safe].reshape(B, MZ * ZL, KV, hd)
+    v = v_zones[safe].reshape(B, MZ * ZL, KV, hd)
+    pos = jnp.arange(MZ * ZL)[None, :]                     # [1, S]
+    valid = (pos < lengths[:, None]) & jnp.repeat(
+        zone_table >= 0, ZL, axis=1)
+
+    qh = q.reshape(B, KV, G, hd).astype(jnp.float32) * hd ** -0.5
+    logits = jnp.einsum("bkgh,bskh->bkgs", qh, k.astype(jnp.float32))
+    logits = jnp.where(valid[:, None, None, :], logits, -1e30)
+    att = jnp.exp(logits - logits.max(-1, keepdims=True))
+    att = att / att.sum(-1, keepdims=True)
+    out = jnp.einsum("bkgs,bskh->bkgh", att, v.astype(jnp.float32))
+    return out.reshape(B, H, hd).astype(q.dtype)

@@ -1,0 +1,7 @@
+from repro.kernels.zone_filter.ops import (
+    KERNELIZABLE_TERMINALS,
+    run_program_kernel,
+    zone_filter_count,
+)
+
+__all__ = ["zone_filter_count", "run_program_kernel", "KERNELIZABLE_TERMINALS"]

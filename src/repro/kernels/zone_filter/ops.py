@@ -1,0 +1,106 @@
+"""Public jit'd wrappers for the zone_filter kernel, including the bridge
+from verified offload Programs (repro.core) to the Pallas tier."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.programs import CMP_OPS, OpCode, Program
+from repro.kernels.zone_filter.kernel import filtered_reduce_pallas
+
+__all__ = ["zone_filter_count", "zone_reduce", "run_program_kernel",
+           "KERNELIZABLE_TERMINALS", "kernelizable"]
+
+# RED_SUM over ints is NOT kernelized: TPU has no i64 accumulator and f32
+# accumulation would silently lose precision vs the verifier-promised i64
+# semantics — those programs fall back to the XLA JIT tier.
+KERNELIZABLE_TERMINALS = frozenset(
+    {OpCode.RED_COUNT, OpCode.RED_SUM, OpCode.RED_MIN, OpCode.RED_MAX})
+
+_TERM_KIND = {
+    OpCode.RED_COUNT: "count", OpCode.RED_SUM: "sum",
+    OpCode.RED_MIN: "min", OpCode.RED_MAX: "max",
+}
+
+
+def kernelizable(program: Program) -> bool:
+    term = program.terminal.op
+    if term not in KERNELIZABLE_TERMINALS:
+        return False
+    if term == OpCode.RED_SUM and np.dtype(program.input_dtype).kind != "f":
+        return False
+    if any(i.op == OpCode.FIELD for i in program.insns):
+        return False  # projection changes block geometry; JIT tier handles it
+    return True
+
+
+def _program_transform(program: Program):
+    """Trace the ALU/CMP chain into a fused (vals, mask) transform."""
+    def transform(x):
+        mask = jnp.ones(x.shape, bool)
+        for insn in program.insns[:-1]:
+            op, imm = insn.op, insn.imm
+            if op in CMP_OPS:
+                immt = jnp.asarray(imm, x.dtype)
+                mask &= {
+                    OpCode.CMP_GT: x > immt, OpCode.CMP_GE: x >= immt,
+                    OpCode.CMP_LT: x < immt, OpCode.CMP_LE: x <= immt,
+                    OpCode.CMP_EQ: x == immt, OpCode.CMP_NE: x != immt,
+                }[op]
+            elif op == OpCode.ABS:
+                x = jnp.abs(x)
+            elif op == OpCode.NEG:
+                x = -x
+            else:
+                immt = jnp.asarray(imm, x.dtype)
+                x = {
+                    OpCode.ADD: lambda: x + immt, OpCode.SUB: lambda: x - immt,
+                    OpCode.MUL: lambda: x * immt, OpCode.AND: lambda: x & immt,
+                    OpCode.OR: lambda: x | immt, OpCode.XOR: lambda: x ^ immt,
+                    OpCode.SHL: lambda: x << imm, OpCode.SHR: lambda: x >> imm,
+                    OpCode.MOD: lambda: x % immt,
+                }[op]()
+        return x, mask
+    return transform
+
+
+@functools.partial(jax.jit, static_argnames=("threshold", "interpret",
+                                             "block_pages"))
+def zone_filter_count(pages, threshold, *, interpret: bool = True,
+                      block_pages: int = 512):
+    """The paper's workload: count zone elements above threshold."""
+    thr = threshold
+    return filtered_reduce_pallas(
+        pages, kind="count",
+        transform=lambda x: (x, x > jnp.asarray(thr, x.dtype)),
+        block_pages=block_pages, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("kind", "threshold", "interpret",
+                                             "block_pages"))
+def zone_reduce(pages, kind: str = "count", threshold=None, *,
+                interpret: bool = True, block_pages: int = 512):
+    if threshold is None:
+        transform = None
+    else:
+        thr = threshold
+        transform = lambda x: (x, x > jnp.asarray(thr, x.dtype))
+    return filtered_reduce_pallas(pages, kind=kind, transform=transform,
+                                  block_pages=block_pages, interpret=interpret)
+
+
+def run_program_kernel(program: Program, pages: np.ndarray, *,
+                       interpret: bool = True):
+    """Execute a verified Program on the Pallas tier (the CSD 'hardware
+    backend'). Caller guarantees kernelizable(program)."""
+    if not kernelizable(program):
+        raise ValueError(f"program {program.name} is not kernelizable")
+    kind = _TERM_KIND[program.terminal.op]
+    transform = _program_transform(program)
+    fn = jax.jit(functools.partial(
+        filtered_reduce_pallas, kind=kind, transform=transform,
+        interpret=interpret))
+    return fn(jnp.asarray(pages))

@@ -1,0 +1,40 @@
+"""Pure-jnp oracle for the zone_filter kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = ["zone_filter_count_ref", "zone_reduce_ref"]
+
+
+def zone_filter_count_ref(pages: jnp.ndarray, threshold) -> jnp.ndarray:
+    """Count elements strictly greater than threshold (paper Fig.2 op).
+    pages: [n_pages, page_elems]."""
+    return (pages > jnp.asarray(threshold, pages.dtype)).sum(dtype=jnp.int32)
+
+
+def zone_reduce_ref(pages: jnp.ndarray, kind: str, threshold=None) -> jnp.ndarray:
+    """Filtered reduction oracle. kind in {count,sum,min,max}; elements
+    participate iff > threshold (or all, when threshold is None)."""
+    x = pages
+    if threshold is not None:
+        mask = x > jnp.asarray(threshold, x.dtype)
+    else:
+        mask = jnp.ones(x.shape, bool)
+    if kind == "count":
+        return mask.sum(dtype=jnp.int32)
+    if kind == "sum":
+        # integer sums stay integer: f32 accumulation is only exact to 2^24
+        # (hypothesis found the divergence at ~2e8) — match the kernel's
+        # exact i32 partials for int inputs
+        if x.dtype.kind != "f":
+            return jnp.where(mask, x, 0).sum(dtype=jnp.int32)
+        return jnp.where(mask, x, 0).astype(jnp.float32).sum()
+    if kind == "min":
+        big = jnp.asarray(jnp.finfo(jnp.float32).max if x.dtype.kind == "f"
+                          else jnp.iinfo(x.dtype).max, x.dtype)
+        return jnp.where(mask, x, big).min()
+    if kind == "max":
+        small = jnp.asarray(jnp.finfo(jnp.float32).min if x.dtype.kind == "f"
+                            else jnp.iinfo(x.dtype).min, x.dtype)
+        return jnp.where(mask, x, small).max()
+    raise ValueError(kind)

@@ -1,0 +1,483 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST precede any jax import: jax locks the device count on first init.
+# The dry-run (and ONLY the dry-run) builds the production 256/512-chip mesh
+# out of host placeholder devices; .lower().compile() then proves every
+# (arch x shape x mesh) cell's sharding is coherent without real hardware.
+
+"""Multi-pod dry-run driver.
+
+For each (architecture x input-shape x mesh) cell:
+
+  1. build the production mesh (16x16 single-pod / 2x16x16 multi-pod);
+  2. resolve sharding rules (FSDP+TP for train, TP(+SP-KV) for decode);
+  3. jit the step function with NamedSharding in/out shardings;
+  4. ``.lower()`` against ShapeDtypeStruct inputs (zero allocation);
+  5. ``.compile()`` — GSPMD partitioning must succeed;
+  6. record ``memory_analysis()`` (fits-per-device proof),
+     ``cost_analysis()`` (FLOPs / bytes for the roofline), and the
+     collective-op byte census parsed from the optimized HLO.
+
+Results append to a JSONL file so the sweep is resumable per cell:
+
+  PYTHONPATH=src python -m repro.launch.dryrun --arch granite-8b \
+      --shape train_4k --mesh single --out results/dryrun.jsonl
+  PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both
+"""
+import argparse
+import json
+import re
+import sys
+import time
+import traceback
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import ARCH_IDS, get_config
+from repro.models import abstract_params, cache_specs
+from repro.models.api import decode_input_specs, train_input_specs
+from repro.models.config import SHAPES, ModelConfig, ShapeSpec, shape_applicable
+from repro.launch.mesh import make_production_mesh
+from repro.serve.step import make_prefill_step, make_serve_step
+from repro.sharding import (
+    named_sharding_for, param_shardings, rules_for, use_rules,
+)
+from repro.train.step import TrainHyper, make_train_step, train_state_specs
+
+# ------------------------------------------------------------ HLO parsing
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+_SHAPE_RE = re.compile(r"\b([a-z]+\d+|pred)\[([0-9,]*)\]")
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1,
+}
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*((?:\([^=]*?\)|[a-z0-9]+\[[0-9,]*\]\S*))\s+([a-z\-]+)"
+)
+
+
+def _result_bytes(shape_str: str) -> int:
+    return sum(_shape_bytes(dt, dims) for dt, dims in _SHAPE_RE.findall(shape_str))
+
+
+def parse_collectives(hlo_text: str) -> dict:
+    """Sum *operand* bytes of every collective op in the (per-device SPMD)
+    optimized HLO. Post-optimization HLO references operands by name only, so
+    this is two-pass: (1) symbol table name -> result bytes; (2) for each
+    collective instruction, sum its operands' bytes."""
+    sizes: dict[str, int] = {}
+    collective_lines: list[tuple[str, str]] = []
+    for line in hlo_text.splitlines():
+        m = _INSTR_RE.match(line)
+        if not m:
+            continue
+        name, shape_str, opcode = m.groups()
+        sizes[name] = _result_bytes(shape_str)
+        if opcode in _COLLECTIVES:
+            collective_lines.append((opcode, line))
+
+    out = {k: {"bytes": 0, "wire_bytes": 0, "count": 0} for k in _COLLECTIVES}
+    opref = re.compile(r"[(,]\s*%?([\w.\-]+)")
+    name_re = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=")
+    for kind, line in collective_lines:
+        call = line.split(f" {kind}(", 1)
+        operands = []
+        if len(call) == 2:
+            args = call[1].split(")", 1)[0]
+            operands = [o for o in opref.findall("(" + args)]
+        nbytes = sum(sizes.get(o, 0) for o in operands)
+        out[kind]["bytes"] += nbytes
+        # wire bytes: all-gather RECEIVES the gathered result (operand is
+        # only this device's shard); AR/RS/a2a/permute move ~operand bytes
+        if kind == "all-gather":
+            nm = name_re.match(line)
+            out[kind]["wire_bytes"] += sizes.get(nm.group(1), 0) if nm else nbytes
+        else:
+            out[kind]["wire_bytes"] += nbytes
+        out[kind]["count"] += 1
+    out["total_bytes"] = sum(v["bytes"] for k, v in out.items()
+                             if isinstance(v, dict))
+    out["total_wire_bytes"] = sum(v["wire_bytes"] for k, v in out.items()
+                                  if isinstance(v, dict))
+    out["total_count"] = sum(v["count"] for k, v in out.items()
+                             if isinstance(v, dict))
+    return out
+
+
+# small dense archs train all-reduce-free as pure ZeRO-3 (§Perf iteration 6):
+# per-layer TP all-reduces (~9 GB) dwarf their param all-gathers (~2.6 GB),
+# and spreading batch over the model axis drops grad-accum to 1. Large archs
+# keep TP: with grad accumulation, FSDP would re-gather params per microbatch.
+PRESET_BY_ARCH = {
+    "granite-8b": "fsdp",
+    "h2o-danube-1.8b": "fsdp",
+    "starcoder2-3b": "fsdp",
+    "mamba2-780m": "fsdp",
+    "seamless-m4t-large-v2": "fsdp",
+}
+
+
+# ----------------------------------------------------------- accum policy
+
+def pick_grad_accum(cfg: ModelConfig, shape: ShapeSpec, n_batch_shards: int,
+                    budget_bytes: float = 3.5e9) -> int:
+    """Smallest power-of-two microbatch count keeping the rematerialized
+    activation footprint (~ saved layer inputs) under budget."""
+    b_loc = max(shape.global_batch // n_batch_shards, 1)
+    per_layer = b_loc * shape.seq_len * cfg.d_model * 2  # bf16 layer input
+    saved_factor = 3 if cfg.remat == "save_collectives" else 1
+    approx = (cfg.num_layers * per_layer * saved_factor
+              * (2 if cfg.family == "hybrid" else 1))
+    accum = 1
+    while approx / accum > budget_bytes and accum < shape.global_batch \
+            and accum < 64:
+        accum *= 2
+    while shape.global_batch % (accum * n_batch_shards) and accum > 1:
+        accum //= 2
+    return accum
+
+
+# ------------------------------------------------------------- cost probes
+#
+# XLA's HloCostAnalysis counts while-loop (lax.scan) bodies ONCE, independent
+# of trip count — so the production (scanned) lowering under-reports FLOPs by
+# ~num_layers x. The roofline therefore uses *cost probes*: the same cell
+# lowered with 1-3 pattern-preserving layer counts, scans fully unrolled and
+# grad_accum=1 (while-free => exact counts), then extrapolated linearly in
+# depth:  c(L) = prologue + L x layer_body. probe_plan returns
+# [(cfg_overrides, weight)] with  sum_i w_i * c(probe_i) = c(full).
+
+def probe_plan(cfg: ModelConfig) -> list[tuple[dict, float]]:
+    L = cfg.num_layers
+    if cfg.family == "hybrid":
+        pat = len(cfg.block_pattern) or 1
+        full, rem = divmod(L, pat)
+        plan = [({"num_layers": pat}, float(1 - (full - 1) - (1 if rem else 0))),
+                ({"num_layers": 2 * pat}, float(full - 1))]
+        if rem:
+            plan.append(({"num_layers": pat + rem}, 1.0))
+        return plan
+    if cfg.family == "vlm" and cfg.cross_attn_stride:
+        s = cfg.cross_attn_stride
+        full, rem = divmod(L, s)
+        plan = [({"num_layers": s}, float(1 - (full - 1) - (1 if rem else 0))),
+                ({"num_layers": 2 * s}, float(full - 1))]
+        if rem:
+            plan.append(({"num_layers": s + rem}, 1.0))
+        return plan
+    if cfg.family == "moe" and cfg.first_layer_dense:
+        return [({"num_layers": 2}, float(1 - (L - 2))),
+                ({"num_layers": 3}, float(L - 2))]
+    if cfg.is_encoder_decoder:
+        return [({"num_layers": 1, "encoder_layers": 1}, float(1 - (L - 1))),
+                ({"num_layers": 2, "encoder_layers": 2}, float(L - 1))]
+    return [({"num_layers": 1}, float(1 - (L - 1))),
+            ({"num_layers": 2}, float(L - 1))]
+
+
+def run_probe_cells(arch: str, shape_name: str, preset=None) -> list[dict]:
+    """Lower the cost probes for one (arch x shape) on the single-pod mesh."""
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    ok, why = shape_applicable(cfg, shape)
+    if not ok:
+        return [{"arch": arch, "shape": shape_name, "mesh": "16x16",
+                 "kind": "probe", "status": "skipped", "reason": why}]
+    preset = preset or PRESET_BY_ARCH.get(arch, "tp")
+    recs = []
+    for i, (overrides, weight) in enumerate(probe_plan(cfg)):
+        pcfg = cfg.replace(scan_unroll=True, **overrides)
+        rec = {"arch": arch, "shape": shape_name, "mesh": "16x16",
+               "kind": "probe", "probe_index": i, "weight": weight,
+               "overrides": overrides, "preset": preset}
+        t0 = time.time()
+        try:
+            mesh = make_production_mesh(multi_pod=False)
+            lowered, meta = build_cell(pcfg, shape, mesh, grad_accum=1,
+                                       preset=preset)
+            compiled = lowered.compile()
+            cost = compiled.cost_analysis()
+            rec["cost_analysis"] = {
+                k: float(v) for k, v in cost.items()
+                if isinstance(v, (int, float)) and (
+                    "flops" in k or "bytes" in k or k in ("transcendentals",))
+            }
+            rec["collectives"] = parse_collectives(compiled.as_text())
+            rec["status"] = "ok"
+        except Exception as e:
+            rec.update(status="error", error=f"{type(e).__name__}: {e}",
+                       traceback=traceback.format_exc()[-4000:])
+        rec["total_seconds"] = round(time.time() - t0, 2)
+        recs.append(rec)
+    return recs
+
+
+# -------------------------------------------------------------- lowerings
+
+def batch_shardings(specs: dict, mesh, batch_axes) -> dict:
+    sh = {}
+    for k, v in specs.items():
+        parts = [batch_axes] + [None] * (len(v.shape) - 1)
+        sh[k] = NamedSharding(mesh, P(*parts))
+    return sh
+
+
+def build_cell(cfg: ModelConfig, shape: ShapeSpec, mesh, grad_accum=None,
+               preset: str = "tp"):
+    """Returns (lowered, meta) for one cell.
+
+    preset="tp"   — FSDP over data + Megatron TP over model (default);
+    preset="fsdp" — pure ZeRO-3: batch AND parameters shard over every mesh
+                    axis, no tensor parallelism (all-reduce-free; best for
+                    small archs where per-layer TP all-reduces dominate).
+    """
+    axes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    if preset == "fsdp" and shape.kind == "train":
+        batch_ax_names = tuple(a for a in ("pod", "data", "model") if a in axes)
+        overrides = {
+            "q_heads": None, "kv_heads": None, "mlp": None, "vocab": None,
+            "experts": None, "expert_mlp": None, "ssm_inner": None,
+            "ssm_heads": None,
+            "act_heads": None, "act_kv_heads": None, "act_mlp": None,
+            "act_vocab": None, "act_experts": None, "act_expert_mlp": None,
+            "act_ssm_inner": None, "act_ssm_heads": None,
+            "embed": batch_ax_names,
+        }
+    else:
+        preset = "tp"
+        batch_ax_names = tuple(a for a in ("pod", "data") if a in axes)
+        overrides = {}
+    n_batch_shards = 1
+    for a in batch_ax_names:
+        n_batch_shards *= axes[a]
+    batch_axes = batch_ax_names
+    if shape.global_batch % max(n_batch_shards, 1):
+        batch_axes = None  # tiny batches (long_500k): replicate batch dim
+    overrides["act_batch"] = batch_axes
+
+    if shape.kind == "train":
+        rules = rules_for("train", cfg, mesh, overrides)
+        accum = grad_accum if grad_accum is not None else pick_grad_accum(
+            cfg, shape, n_batch_shards if batch_axes else 1)
+        hyper = TrainHyper(grad_accum=accum)
+        step = make_train_step(cfg, hyper)
+        state_specs = train_state_specs(cfg)
+        state_sh = param_shardings(state_specs, mesh, rules)
+        in_specs = train_input_specs(cfg, shape)
+        in_sh = batch_shardings(in_specs, mesh, batch_axes)
+        with use_rules(rules), mesh:
+            lowered = jax.jit(
+                step,
+                in_shardings=(state_sh, in_sh),
+                out_shardings=(state_sh, NamedSharding(mesh, P())),
+            ).lower(abstract_params(state_specs), in_specs)
+        return lowered, {"grad_accum": accum, "rules": rules.name,
+                         "preset": preset, "step": "train_step"}
+
+    if shape.kind == "prefill":
+        rules = rules_for("prefill", cfg, mesh, overrides)
+        step = make_prefill_step(cfg)
+        state_specs = train_state_specs(cfg)["params"]
+        p_sh = param_shardings(state_specs, mesh, rules)
+        in_specs = train_input_specs(cfg, shape)
+        in_specs.pop("labels")
+        in_sh = batch_shardings(in_specs, mesh, batch_axes)
+        c_specs = cache_specs(cfg, shape.global_batch, shape.seq_len)
+        c_sh = param_shardings(c_specs, mesh, rules)
+        logits_sh = named_sharding_for(
+            (shape.global_batch, cfg.vocab_size),
+            ("act_batch", "act_vocab"), mesh, rules)
+        with use_rules(rules), mesh:
+            lowered = jax.jit(
+                step,
+                in_shardings=(p_sh, in_sh),
+                out_shardings=(logits_sh, c_sh),
+            ).lower(abstract_params(state_specs), in_specs)
+        return lowered, {"rules": rules.name, "step": "prefill_step"}
+
+    # decode
+    rules = rules_for("decode", cfg, mesh, overrides)
+    step = make_serve_step(cfg)
+    state_specs = train_state_specs(cfg)["params"]
+    p_sh = param_shardings(state_specs, mesh, rules)
+    c_specs = cache_specs(cfg, shape.global_batch, shape.seq_len)
+    c_sh = param_shardings(c_specs, mesh, rules)
+    tok_sh = NamedSharding(mesh, P(batch_axes, None))
+    pos_sh = NamedSharding(mesh, P())
+    logits_sh = named_sharding_for(
+        (shape.global_batch, cfg.vocab_size), ("act_batch", "act_vocab"),
+        mesh, rules)
+    inputs = decode_input_specs(cfg, shape)
+    with use_rules(rules), mesh:
+        lowered = jax.jit(
+            step,
+            in_shardings=(p_sh, c_sh, tok_sh, pos_sh),
+            out_shardings=(tok_sh, logits_sh, c_sh),
+        ).lower(abstract_params(state_specs), inputs["cache"],
+                inputs["tokens"], inputs["pos"])
+    return lowered, {"rules": rules.name, "step": "serve_step"}
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             grad_accum=None, keep_hlo_dir=None, preset=None) -> dict:
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    preset = preset or PRESET_BY_ARCH.get(arch, "tp")
+    rec = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "family": cfg.family,
+        "params": cfg.param_count(),
+        "active_params": cfg.active_param_count(),
+    }
+    ok, why = shape_applicable(cfg, shape)
+    if not ok:
+        rec.update(status="skipped", reason=why)
+        return rec
+    t0 = time.time()
+    try:
+        mesh = make_production_mesh(multi_pod=multi_pod)
+        lowered, meta = build_cell(cfg, shape, mesh, grad_accum, preset=preset)
+        rec.update(meta)
+        rec["lower_seconds"] = round(time.time() - t0, 2)
+        t1 = time.time()
+        compiled = lowered.compile()
+        rec["compile_seconds"] = round(time.time() - t1, 2)
+        mem = compiled.memory_analysis()
+        rec["memory_analysis"] = {
+            k: int(getattr(mem, k))
+            for k in ("argument_size_in_bytes", "output_size_in_bytes",
+                      "temp_size_in_bytes", "generated_code_size_in_bytes")
+            if hasattr(mem, k)
+        }
+        cost = compiled.cost_analysis()
+        rec["cost_analysis"] = {
+            k: float(v) for k, v in cost.items()
+            if isinstance(v, (int, float)) and (
+                "flops" in k or "bytes" in k or k in ("transcendentals",))
+        }
+        hlo = compiled.as_text()
+        rec["collectives"] = parse_collectives(hlo)
+        rec["hlo_lines"] = hlo.count("\n")
+        if keep_hlo_dir:
+            p = Path(keep_hlo_dir)
+            p.mkdir(parents=True, exist_ok=True)
+            (p / f"{arch}__{shape_name}__{rec['mesh']}.hlo.txt").write_text(hlo)
+        rec["status"] = "ok"
+    except Exception as e:  # a failed cell is a bug in our sharding
+        rec.update(status="error", error=f"{type(e).__name__}: {e}",
+                   traceback=traceback.format_exc()[-4000:])
+    rec["total_seconds"] = round(time.time() - t0, 2)
+    return rec
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", choices=ARCH_IDS)
+    ap.add_argument("--shape", choices=tuple(SHAPES))
+    ap.add_argument("--mesh", choices=("single", "multi", "both"),
+                    default="single")
+    ap.add_argument("--all", action="store_true", help="run every cell")
+    ap.add_argument("--out", default="results/dryrun.jsonl")
+    ap.add_argument("--grad-accum", type=int, default=None)
+    ap.add_argument("--keep-hlo", default=None,
+                    help="directory to dump optimized HLO text per cell")
+    ap.add_argument("--skip-done", action="store_true",
+                    help="skip cells already present with status=ok in --out")
+    ap.add_argument("--probes", action="store_true",
+                    help="run the unrolled cost probes (single-pod) instead "
+                         "of the production lowerings")
+    args = ap.parse_args()
+
+    cells: list[tuple[str, str, bool]] = []
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+    if args.all:
+        for a in ARCH_IDS:
+            for s in SHAPES:
+                for m in meshes:
+                    cells.append((a, s, m))
+    else:
+        if not (args.arch and args.shape):
+            ap.error("--arch and --shape required unless --all")
+        cells = [(args.arch, args.shape, m) for m in meshes]
+
+    out = Path(args.out)
+    out.parent.mkdir(parents=True, exist_ok=True)
+    done = set()
+    if args.skip_done and out.exists():
+        for line in out.read_text().splitlines():
+            try:
+                r = json.loads(line)
+                if r.get("status") in ("ok", "skipped"):
+                    done.add((r["arch"], r["shape"], r["mesh"]))
+            except json.JSONDecodeError:
+                pass
+
+    failures = 0
+    if args.probes:
+        seen_probe = set()
+        for arch, shape_name, _ in cells:
+            if (arch, shape_name) in seen_probe:
+                continue
+            seen_probe.add((arch, shape_name))
+            if args.skip_done and (arch, shape_name, "16x16") in done:
+                print(f"[probes] SKIP (done) {arch} {shape_name}")
+                continue
+            print(f"[probes] {arch} x {shape_name} ...", flush=True)
+            recs = run_probe_cells(arch, shape_name)
+            with out.open("a") as f:
+                for rec in recs:
+                    f.write(json.dumps(rec) + "\n")
+            for rec in recs:
+                if rec["status"] == "error":
+                    failures += 1
+                    print(f"  ERROR probe {rec.get('probe_index')}: {rec['error']}")
+                elif rec["status"] == "ok":
+                    print(f"  probe {rec['probe_index']} ok "
+                          f"({rec['total_seconds']}s, w={rec['weight']}, "
+                          f"flops={rec['cost_analysis'].get('flops', 0):.3e})")
+                else:
+                    print(f"  skipped: {rec.get('reason')}")
+        return 1 if failures else 0
+
+    for arch, shape_name, multi in cells:
+        mesh_name = "2x16x16" if multi else "16x16"
+        if (arch, shape_name, mesh_name) in done:
+            print(f"[dryrun] SKIP (done) {arch} {shape_name} {mesh_name}")
+            continue
+        print(f"[dryrun] {arch} x {shape_name} x {mesh_name} ...", flush=True)
+        rec = run_cell(arch, shape_name, multi, args.grad_accum, args.keep_hlo)
+        with out.open("a") as f:
+            f.write(json.dumps(rec) + "\n")
+        if rec["status"] == "ok":
+            ca = rec["cost_analysis"]
+            print(f"  ok in {rec['total_seconds']}s  "
+                  f"flops/dev={ca.get('flops', 0):.3e}  "
+                  f"coll_bytes/dev={rec['collectives']['total_bytes']:.3e}")
+        elif rec["status"] == "skipped":
+            print(f"  skipped: {rec['reason']}")
+        else:
+            failures += 1
+            print(f"  ERROR: {rec['error']}")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,28 @@
+"""Production mesh construction.
+
+``make_production_mesh`` is a FUNCTION (not a module-level constant) so that
+importing this module never touches JAX device state — the dry-run sets
+``xla_force_host_platform_device_count`` before first JAX init and only then
+builds meshes.
+
+Production topology (TPU v5e): one pod = 16 x 16 = 256 chips,
+axes (data, model); two pods = (2, 16, 16), axes (pod, data, model).
+The "pod" axis is outer data-parallel (gradient all-reduce crosses DCN);
+"model" is the intra-pod tensor/expert-parallel axis on ICI.
+"""
+from __future__ import annotations
+
+import jax
+
+__all__ = ["make_production_mesh", "make_local_mesh"]
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_local_mesh(data: int = 1, model: int = 1):
+    """Small mesh over however many (host) devices exist — for tests."""
+    return jax.make_mesh((data, model), ("data", "model"))

@@ -1,0 +1,78 @@
+"""Input construction: abstract specs (dry-run) and random batches (tests).
+
+``input_specs(cfg, shape)`` returns the exact pytree a step function is
+lowered against — ShapeDtypeStructs only, no allocation. Modality frontends
+(audio frames, vision patches) are STUBS per the assignment: the specs carry
+precomputed embeddings in model space.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import cache_specs, abstract_params
+from repro.models.config import ModelConfig, ShapeSpec
+from repro.models.transformer import memory_len
+
+__all__ = ["train_input_specs", "decode_input_specs", "make_batch",
+           "make_decode_inputs"]
+
+
+def train_input_specs(cfg: ModelConfig, shape: ShapeSpec) -> dict:
+    """Batch specs for train_step / prefill forward."""
+    B, L = shape.global_batch, shape.seq_len
+    cdt = jnp.dtype(cfg.compute_dtype)
+    specs = {
+        "tokens": jax.ShapeDtypeStruct((B, L), jnp.int32),
+        "labels": jax.ShapeDtypeStruct((B, L), jnp.int32),
+    }
+    if cfg.is_encoder_decoder:
+        Lf = int(L * cfg.encoder_seq_factor)
+        specs["frames"] = jax.ShapeDtypeStruct((B, Lf, cfg.d_model), cdt)
+    if cfg.family == "vlm":
+        specs["patches"] = jax.ShapeDtypeStruct(
+            (B, cfg.num_image_tokens, cfg.d_model), cdt)
+    return specs
+
+
+def decode_input_specs(cfg: ModelConfig, shape: ShapeSpec) -> dict:
+    """Specs for serve_step: one new token against a seq_len-deep cache."""
+    B, L = shape.global_batch, shape.seq_len
+    return {
+        "tokens": jax.ShapeDtypeStruct((B, 1), jnp.int32),
+        "pos": jax.ShapeDtypeStruct((), jnp.int32),
+        "cache": abstract_params(cache_specs(cfg, B, L)),
+    }
+
+
+# ------------------------------------------------------------ concrete data
+
+def make_batch(cfg: ModelConfig, batch: int, seq: int, seed: int = 0) -> dict:
+    rng = np.random.default_rng(seed)
+    out = {
+        "tokens": jnp.asarray(
+            rng.integers(0, cfg.vocab_size, (batch, seq)), jnp.int32),
+        "labels": jnp.asarray(
+            rng.integers(0, cfg.vocab_size, (batch, seq)), jnp.int32),
+    }
+    cdt = jnp.dtype(cfg.compute_dtype)
+    if cfg.is_encoder_decoder:
+        Lf = int(seq * cfg.encoder_seq_factor)
+        out["frames"] = jnp.asarray(
+            rng.standard_normal((batch, Lf, cfg.d_model)) * 0.05, cdt)
+    if cfg.family == "vlm":
+        out["patches"] = jnp.asarray(
+            rng.standard_normal((batch, cfg.num_image_tokens, cfg.d_model)) * 0.05,
+            cdt)
+    return out
+
+
+def make_decode_inputs(cfg: ModelConfig, batch: int, seq: int, seed: int = 0):
+    from repro.models.params import init_params
+    rng = np.random.default_rng(seed)
+    tokens = jnp.asarray(rng.integers(0, cfg.vocab_size, (batch, 1)), jnp.int32)
+    cache = init_params(cache_specs(cfg, batch, seq), jax.random.PRNGKey(seed))
+    return tokens, jnp.asarray(0, jnp.int32), cache

@@ -1,0 +1,117 @@
+"""Shared building blocks: norms, RoPE, MLPs, embeddings."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.params import ParamSpec
+from repro.sharding import shard_act, use_param
+
+__all__ = [
+    "norm_specs", "apply_norm", "mlp_specs", "apply_mlp",
+    "embed_specs", "rope", "softcap", "cdtype",
+]
+
+
+def cdtype(cfg: ModelConfig):
+    return jnp.dtype(cfg.compute_dtype)
+
+
+# ------------------------------------------------------------------- norms
+
+def norm_specs(cfg: ModelConfig, dim: Optional[int] = None) -> dict:
+    d = dim or cfg.d_model
+    specs = {"scale": ParamSpec((d,), ("embed",), init="ones")}
+    if cfg.norm == "layer" and cfg.use_bias:
+        specs["bias"] = ParamSpec((d,), ("embed",), init="zeros")
+    return specs
+
+
+def apply_norm(cfg: ModelConfig, p: dict, x: jnp.ndarray, eps: float = 1e-6):
+    xf = x.astype(jnp.float32)
+    if cfg.norm == "layer":
+        mu = xf.mean(-1, keepdims=True)
+        var = ((xf - mu) ** 2).mean(-1, keepdims=True)
+        y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    else:  # rmsnorm
+        y = xf * jax.lax.rsqrt((xf ** 2).mean(-1, keepdims=True) + eps)
+    y = y * p["scale"].astype(jnp.float32)
+    if "bias" in p:
+        y = y + p["bias"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+# -------------------------------------------------------------------- MLPs
+
+def mlp_specs(cfg: ModelConfig, d_ff: Optional[int] = None) -> dict:
+    d, f = cfg.d_model, d_ff or cfg.d_ff
+    if cfg.activation in ("silu", "gelu_glu"):  # gated (llama / gemma family)
+        specs = {
+            "gate": ParamSpec((d, f), ("embed", "mlp"), init="fan_in"),
+            "up": ParamSpec((d, f), ("embed", "mlp"), init="fan_in"),
+            "down": ParamSpec((f, d), ("mlp", "embed"), init="fan_in"),
+        }
+    else:  # classic 2-matrix MLP (starcoder2, seamless)
+        specs = {
+            "up": ParamSpec((d, f), ("embed", "mlp"), init="fan_in"),
+            "down": ParamSpec((f, d), ("mlp", "embed"), init="fan_in"),
+        }
+        if cfg.use_bias:
+            specs["up_b"] = ParamSpec((f,), ("mlp",), init="zeros")
+            specs["down_b"] = ParamSpec((d,), ("embed",), init="zeros")
+    return specs
+
+
+def apply_mlp(cfg: ModelConfig, p: dict, x: jnp.ndarray) -> jnp.ndarray:
+    dt = cdtype(cfg)
+    if cfg.activation in ("silu", "gelu_glu"):
+        act = jax.nn.silu if cfg.activation == "silu" else (
+            lambda t: jax.nn.gelu(t, approximate=True))
+        gate = use_param(p["gate"], ("embed", "mlp"))
+        up = use_param(p["up"], ("embed", "mlp"))
+        h = act(x @ gate.astype(dt)) * (x @ up.astype(dt))
+    else:
+        h = x @ use_param(p["up"], ("embed", "mlp")).astype(dt)
+        if "up_b" in p:
+            h = h + p["up_b"].astype(dt)
+        h = jax.nn.gelu(h, approximate=True)
+    h = shard_act(h, ("act_batch", "act_seq", "act_mlp"))
+    y = h @ use_param(p["down"], ("mlp", "embed")).astype(dt)
+    if "down_b" in p:
+        y = y + p["down_b"].astype(dt)
+    # keep batch@data on the output (see apply_attention's out-proj note)
+    return shard_act(y, ("act_batch", "act_seq", "act_embed"))
+
+
+# -------------------------------------------------------------- embeddings
+
+def embed_specs(cfg: ModelConfig) -> dict:
+    specs = {"tok": ParamSpec((cfg.vocab_size, cfg.d_model), ("vocab", "embed"),
+                              init="normal")}
+    if not cfg.tie_embeddings:
+        specs["head"] = ParamSpec((cfg.d_model, cfg.vocab_size), ("embed", "vocab"),
+                                  init="fan_in")
+    return specs
+
+
+# -------------------------------------------------------------------- RoPE
+
+def rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """Rotary embedding. x: [..., L, hd]; positions: broadcastable to [..., L]."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freq = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+    ang = positions[..., None].astype(jnp.float32) * freq          # [..., L, half]
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = x[..., :half].astype(jnp.float32), x[..., half:].astype(jnp.float32)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def softcap(logits: jnp.ndarray, cap: Optional[float]):
+    if cap is None:
+        return logits
+    return cap * jnp.tanh(logits / cap)

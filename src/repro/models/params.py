@@ -1,0 +1,101 @@
+"""Parameter specification machinery.
+
+A model is described once as a pytree of :class:`ParamSpec` (shape + logical
+axis names + initializer). From that single source of truth we derive:
+
+  * ``init_params``      — materialized arrays (smoke tests, examples);
+  * ``abstract_params``  — ``jax.ShapeDtypeStruct`` stand-ins (dry-run);
+  * ``param_shardings``  — ``NamedSharding`` per leaf, via the logical-axis
+    rules in :mod:`repro.sharding.rules` (MaxText-style).
+
+Logical axis names used throughout the model zoo:
+  layers, embed, q_heads, kv_heads, head_dim, mlp, vocab,
+  experts, expert_mlp, conv, ssm_inner, ssm_state, ssm_heads, ssm_head_dim
+(Activation logical axes are prefixed ``act_`` and handled separately.)
+"""
+from __future__ import annotations
+
+import hashlib
+from dataclasses import dataclass, replace
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["ParamSpec", "init_params", "abstract_params", "stack_layer_specs",
+           "spec_tree_paths"]
+
+
+@dataclass(frozen=True)
+class ParamSpec:
+    shape: tuple[int, ...]
+    axes: tuple[Optional[str], ...]
+    init: str = "normal"          # normal | zeros | ones | fan_in | embed | rglru_a
+    dtype: Any = jnp.bfloat16
+    init_scale: float = 0.02
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+    def with_layers(self, n: int) -> "ParamSpec":
+        """Prepend a scanned 'layers' dimension."""
+        return replace(self, shape=(n, *self.shape), axes=("layers", *self.axes))
+
+
+def _init_one(spec: ParamSpec, key) -> jnp.ndarray:
+    if spec.init == "zeros":
+        return jnp.zeros(spec.shape, spec.dtype)
+    if spec.init == "ones":
+        return jnp.ones(spec.shape, spec.dtype)
+    if spec.init == "rglru_a":
+        # RG-LRU 'a' parameter: initialized so sigmoid-powered decay starts
+        # near 0.9..0.999 (per the Griffin paper)
+        u = jax.random.uniform(key, spec.shape, jnp.float32, 0.9, 0.999)
+        # a = sigmoid(Λ); store Λ
+        lam = jnp.log(u ** 2 / (1 - u ** 2))
+        return lam.astype(spec.dtype)
+    if spec.init == "fan_in":
+        fan_in = spec.shape[-2] if len(spec.shape) >= 2 else spec.shape[-1]
+        scale = 1.0 / np.sqrt(max(fan_in, 1))
+        return (jax.random.normal(key, spec.shape, jnp.float32) * scale).astype(spec.dtype)
+    # default: trunc-normal-ish
+    return (jax.random.normal(key, spec.shape, jnp.float32)
+            * spec.init_scale).astype(spec.dtype)
+
+
+def _is_spec(x) -> bool:
+    return isinstance(x, ParamSpec)
+
+
+def spec_tree_paths(specs) -> list[tuple[str, ParamSpec]]:
+    flat, _ = jax.tree_util.tree_flatten_with_path(specs, is_leaf=_is_spec)
+    return [(jax.tree_util.keystr(path), leaf) for path, leaf in flat]
+
+
+def init_params(specs, key) -> Any:
+    """Materialize a ParamSpec tree. Keys are derived from the tree path so
+    insertion order never changes initialization (checkpoint stability)."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(specs, is_leaf=_is_spec)
+    leaves = []
+    for path, spec in flat:
+        name = jax.tree_util.keystr(path)
+        digest = int.from_bytes(
+            hashlib.sha256(name.encode()).digest()[:4], "little"
+        )
+        leaves.append(_init_one(spec, jax.random.fold_in(key, digest)))
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+def abstract_params(specs) -> Any:
+    """ShapeDtypeStruct stand-ins — zero allocation, for .lower()/.compile()."""
+    return jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, s.dtype), specs, is_leaf=_is_spec
+    )
+
+
+def stack_layer_specs(layer_specs: Any, num_layers: int) -> Any:
+    """Give every spec in a per-layer tree a leading scanned 'layers' dim."""
+    return jax.tree.map(
+        lambda s: s.with_layers(num_layers), layer_specs, is_leaf=_is_spec
+    )

@@ -1,0 +1,111 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin, arXiv:2402.19427).
+
+The recurrence ``h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)`` is a
+linear scan — training uses ``jax.lax.associative_scan`` (O(log L) depth,
+parallel over devices); decode is the O(1) single-step update. Input/recency
+gates are block-diagonal linears (num_heads blocks) as in the Griffin paper.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import cdtype
+from repro.models.config import ModelConfig
+from repro.models.params import ParamSpec
+from repro.sharding import shard_act, use_param
+
+__all__ = ["rglru_specs", "apply_rglru", "rglru_decode_step", "rglru_cache_specs"]
+
+
+def rglru_specs(cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    dr = d                                  # lru width = d_model (RG-9b)
+    nb = max(cfg.num_heads, 1)              # gate blocks
+    bw = dr // nb
+    kc = cfg.ssm_conv
+    return {
+        "wx": ParamSpec((d, dr), ("embed", "ssm_inner"), init="fan_in"),
+        "wg": ParamSpec((d, dr), ("embed", "ssm_inner"), init="fan_in"),
+        "conv": ParamSpec((kc, dr), ("conv", "ssm_inner"), init="fan_in"),
+        "w_i": ParamSpec((nb, bw, bw), ("ssm_heads", None, None), init="fan_in"),
+        "b_i": ParamSpec((dr,), ("ssm_inner",), init="zeros"),
+        "w_r": ParamSpec((nb, bw, bw), ("ssm_heads", None, None), init="fan_in"),
+        "b_r": ParamSpec((dr,), ("ssm_inner",), init="zeros"),
+        "lam": ParamSpec((dr,), ("ssm_inner",), init="rglru_a", dtype=jnp.float32),
+        "wo": ParamSpec((dr, d), ("ssm_inner", "embed"), init="fan_in"),
+    }
+
+
+def _block_diag(w: jnp.ndarray, b: jnp.ndarray, x: jnp.ndarray) -> jnp.ndarray:
+    """x: [..., dr]; w: [nb, bw, bw] block-diagonal linear."""
+    nb, bw, _ = w.shape
+    xb = x.reshape(*x.shape[:-1], nb, bw)
+    y = jnp.einsum("...nb,nbc->...nc", xb, w.astype(x.dtype))
+    return y.reshape(*x.shape) + b.astype(x.dtype)
+
+
+def _causal_conv(x: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    K = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    return sum(xp[:, i : i + x.shape[1], :] * w[i] for i in range(K))
+
+
+def _gates(cfg: ModelConfig, p: dict, xc: jnp.ndarray):
+    """Returns (log_a, gated_input) in f32."""
+    r = jax.nn.sigmoid(_block_diag(p["w_r"], p["b_r"], xc).astype(jnp.float32))
+    i = jax.nn.sigmoid(_block_diag(p["w_i"], p["b_i"], xc).astype(jnp.float32))
+    log_a = -cfg.rglru_c * jax.nn.softplus(p["lam"]) * r       # [..., dr] f32
+    beta = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12))
+    b = beta * (i * xc.astype(jnp.float32))
+    return log_a, b
+
+
+def apply_rglru(cfg: ModelConfig, p: dict, u: jnp.ndarray,
+                return_cache: bool = False):
+    """u: [B, L, d] (training / prefill, parallel scan). With
+    ``return_cache``, also returns the decode cache (conv tail + h_T)."""
+    dt = cdtype(cfg)
+    x = u @ use_param(p["wx"], ("embed", "ssm_inner")).astype(dt)
+    g = jax.nn.gelu(u @ use_param(p["wg"], ("embed", "ssm_inner")).astype(dt), approximate=True)
+    xc = _causal_conv(x, p["conv"].astype(dt))
+    xc = shard_act(xc, ("act_batch", "act_seq", "act_ssm_inner"))
+    log_a, b = _gates(cfg, p, xc)
+    a = jnp.exp(log_a)
+
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, b2 + a2 * b1
+
+    _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    out = (h.astype(dt) * g) @ use_param(p["wo"], ("ssm_inner", "embed")).astype(dt)
+    if return_cache:
+        kc = cfg.ssm_conv
+        L = x.shape[1]
+        tail = x[:, L - (kc - 1):, :] if L >= kc - 1 else jnp.pad(
+            x, ((0, 0), (kc - 1 - L, 0), (0, 0)))
+        return out, {"conv": tail, "h": h[:, -1, :]}
+    return out
+
+
+def rglru_cache_specs(cfg: ModelConfig, batch: int) -> dict:
+    dr, kc = cfg.d_model, cfg.ssm_conv
+    return {
+        "conv": jax.ShapeDtypeStruct((batch, kc - 1, dr),
+                                     jnp.dtype(cfg.compute_dtype)),
+        "h": jax.ShapeDtypeStruct((batch, dr), jnp.float32),
+    }
+
+
+def rglru_decode_step(cfg: ModelConfig, p: dict, u: jnp.ndarray, cache: dict):
+    """u: [B, 1, d]; O(1) update of (conv window, hidden state)."""
+    dt = cdtype(cfg)
+    x = (u @ p["wx"].astype(dt))[:, 0, :]                        # [B, dr]
+    g = jax.nn.gelu((u @ p["wg"].astype(dt))[:, 0, :], approximate=True)
+    hist = jnp.concatenate([cache["conv"], x[:, None, :]], axis=1)  # [B, kc, dr]
+    xc = jnp.einsum("bkd,kd->bd", hist, p["conv"].astype(dt))
+    log_a, b = _gates(cfg, p, xc)
+    h = jnp.exp(log_a) * cache["h"] + b                          # [B, dr] f32
+    y = (h.astype(dt) * g) @ p["wo"].astype(dt)
+    return y[:, None, :], {"conv": hist[:, 1:, :], "h": h}

@@ -1,0 +1,181 @@
+"""Mamba2 (SSD — state-space duality, arXiv:2405.21060).
+
+Training/prefill uses the chunked SSD algorithm: quadratic attention-like
+computation *within* chunks (matrix form, MXU-friendly) plus a linear
+recurrence over chunk states (lax.scan). Decode is the O(1) recurrent update
+on a persistent ``[B, heads, head_dim, state]`` SSM state plus a depthwise
+conv ring state — the bounded-state property that makes ``long_500k``
+runnable for this arch.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import cdtype
+from repro.models.config import ModelConfig
+from repro.models.params import ParamSpec
+from repro.sharding import shard_act, use_param
+
+__all__ = ["ssm_specs", "apply_ssm", "ssm_decode_step", "ssm_cache_specs"]
+
+
+def ssm_specs(cfg: ModelConfig) -> dict:
+    d, di, ds, nh, kc = (cfg.d_model, cfg.d_inner, cfg.ssm_state,
+                         cfg.ssm_heads, cfg.ssm_conv)
+    return {
+        "wz": ParamSpec((d, di), ("embed", "ssm_inner"), init="fan_in"),
+        "wx": ParamSpec((d, di), ("embed", "ssm_inner"), init="fan_in"),
+        "wB": ParamSpec((d, ds), ("embed", "ssm_state"), init="fan_in"),
+        "wC": ParamSpec((d, ds), ("embed", "ssm_state"), init="fan_in"),
+        "wdt": ParamSpec((d, nh), ("embed", "ssm_heads"), init="fan_in"),
+        "conv_x": ParamSpec((kc, di), ("conv", "ssm_inner"), init="fan_in"),
+        "conv_B": ParamSpec((kc, ds), ("conv", "ssm_state"), init="fan_in"),
+        "conv_C": ParamSpec((kc, ds), ("conv", "ssm_state"), init="fan_in"),
+        "A_log": ParamSpec((nh,), ("ssm_heads",), init="zeros", dtype=jnp.float32),
+        "D": ParamSpec((nh,), ("ssm_heads",), init="ones", dtype=jnp.float32),
+        "dt_bias": ParamSpec((nh,), ("ssm_heads",), init="zeros", dtype=jnp.float32),
+        "norm": ParamSpec((di,), ("ssm_inner",), init="ones"),
+        "wo": ParamSpec((di, d), ("ssm_inner", "embed"), init="fan_in"),
+    }
+
+
+def _causal_conv(x: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    """Depthwise causal conv. x: [B, L, D]; w: [K, D]."""
+    K = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    out = sum(xp[:, i : i + x.shape[1], :] * w[i] for i in range(K))
+    return jax.nn.silu(out)
+
+
+def _gated_rmsnorm(y: jnp.ndarray, z: jnp.ndarray, scale: jnp.ndarray,
+                   eps: float = 1e-6) -> jnp.ndarray:
+    g = (y * jax.nn.silu(z)).astype(jnp.float32)
+    g = g * jax.lax.rsqrt((g ** 2).mean(-1, keepdims=True) + eps)
+    return (g * scale.astype(jnp.float32)).astype(y.dtype)
+
+
+def _project(cfg: ModelConfig, p: dict, u: jnp.ndarray):
+    dt_ = cdtype(cfg)
+    z = u @ use_param(p["wz"], ("embed", "ssm_inner")).astype(dt_)
+    x = u @ use_param(p["wx"], ("embed", "ssm_inner")).astype(dt_)
+    Bm = u @ use_param(p["wB"], ("embed", "ssm_state")).astype(dt_)
+    Cm = u @ use_param(p["wC"], ("embed", "ssm_state")).astype(dt_)
+    dt_raw = (u @ use_param(p["wdt"], ("embed", "ssm_heads")).astype(dt_)).astype(jnp.float32)
+    return z, x, Bm, Cm, dt_raw
+
+
+def apply_ssm(cfg: ModelConfig, p: dict, u: jnp.ndarray,
+              return_cache: bool = False):
+    """u: [B, L, d_model]. Chunked SSD scan (training / prefill).
+    With ``return_cache``, also returns the decode cache (conv tail +
+    final SSM state) so prefill hands off to the recurrent decode path."""
+    B, L, _ = u.shape
+    nh, hp, ds = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+    cl = min(cfg.ssm_chunk, L)
+    assert L % cl == 0, f"seq {L} must be a multiple of ssm_chunk {cl}"
+    nc = L // cl
+
+    z, x, Bm, Cm, dt_raw = _project(cfg, p, u)
+    pre_conv = jnp.concatenate([x, Bm, Cm], axis=-1) if return_cache else None
+    x = _causal_conv(x, p["conv_x"].astype(x.dtype))
+    Bm = _causal_conv(Bm, p["conv_B"].astype(Bm.dtype))
+    Cm = _causal_conv(Cm, p["conv_C"].astype(Cm.dtype))
+    x = shard_act(x, ("act_batch", "act_seq", "act_ssm_inner"))
+
+    dt = jax.nn.softplus(dt_raw + p["dt_bias"])                  # [B, L, nh] f32
+    A = -jnp.exp(p["A_log"])                                     # [nh] f32
+    dA = dt * A                                                  # [B, L, nh]
+
+    # chunk everything: [B, nc, cl, ...]
+    xh = x.reshape(B, nc, cl, nh, hp)
+    Bc = Bm.reshape(B, nc, cl, ds)
+    Cc = Cm.reshape(B, nc, cl, ds)
+    dtc = dt.reshape(B, nc, cl, nh)
+    dAc = dA.reshape(B, nc, cl, nh)
+
+    cs = jnp.cumsum(dAc, axis=2)                                 # [B,nc,cl,nh]
+    # intra-chunk (quadratic, MXU): M[i,j] = (C_i.B_j) exp(cs_i - cs_j) dt_j, i>=j
+    Gm = jnp.einsum("bcis,bcjs->bcij", Cc.astype(jnp.float32),
+                    Bc.astype(jnp.float32))
+    decay = jnp.exp(cs[:, :, :, None, :] - cs[:, :, None, :, :])  # [B,nc,i,j,nh]
+    tri = jnp.tril(jnp.ones((cl, cl), bool))
+    M = jnp.where(tri[None, None, :, :, None],
+                  Gm[..., None] * decay * dtc[:, :, None, :, :], 0.0)
+    y_intra = jnp.einsum("bcijh,bcjhp->bcihp", M.astype(cdtype(cfg)), xh,
+                         preferred_element_type=jnp.float32)
+
+    # chunk boundary states: S_c = sum_j exp(cs_last - cs_j) dt_j B_j (x) x_j
+    decay_last = jnp.exp(cs[:, :, -1:, :] - cs) * dtc            # [B,nc,cl,nh]
+    S = jnp.einsum("bcjh,bcjhp,bcjs->bchps",
+                   decay_last.astype(cdtype(cfg)), xh, Bc,
+                   preferred_element_type=jnp.float32)           # [B,nc,nh,hp,ds]
+
+    # inter-chunk linear recurrence over chunk states
+    Tc = jnp.exp(cs[:, :, -1, :])                                # [B,nc,nh]
+
+    def step(H, inp):
+        S_c, T_c = inp
+        H_prev = H
+        H = H * T_c[:, :, None, None] + S_c
+        return H, H_prev
+
+    H0 = jnp.zeros((B, nh, hp, ds), jnp.float32)
+    H_last, H_prev = jax.lax.scan(step, H0,
+                                  (S.swapaxes(0, 1), Tc.swapaxes(0, 1)))
+    H_prev = H_prev.swapaxes(0, 1)                               # [B,nc,nh,hp,ds]
+
+    y_off = jnp.einsum("bcis,bchps->bcihp", Cc.astype(jnp.float32), H_prev)
+    y_off = y_off * jnp.exp(cs)[..., None]
+
+    y = (y_intra + y_off).reshape(B, L, nh, hp)
+    y = y + (p["D"][None, None, :, None] * x.reshape(B, L, nh, hp).astype(jnp.float32))
+    y = y.reshape(B, L, nh * hp).astype(cdtype(cfg))
+    y = _gated_rmsnorm(y, z, p["norm"])
+    out = y @ use_param(p["wo"], ("ssm_inner", "embed")).astype(y.dtype)
+    if return_cache:
+        kc = cfg.ssm_conv
+        tail = pre_conv[:, L - (kc - 1):, :] if L >= kc - 1 else jnp.pad(
+            pre_conv, ((0, 0), (kc - 1 - L, 0), (0, 0)))
+        return out, {"conv": tail, "state": H_last}
+    return out
+
+
+# ------------------------------------------------------------------- decode
+
+def ssm_cache_specs(cfg: ModelConfig, batch: int) -> dict:
+    """Abstract cache for one SSM layer."""
+    di, ds, nh, hp, kc = (cfg.d_inner, cfg.ssm_state, cfg.ssm_heads,
+                          cfg.ssm_head_dim, cfg.ssm_conv)
+    return {
+        "conv": jax.ShapeDtypeStruct((batch, kc - 1, di + 2 * ds),
+                                     jnp.dtype(cfg.compute_dtype)),
+        "state": jax.ShapeDtypeStruct((batch, nh, hp, ds), jnp.float32),
+    }
+
+
+def ssm_decode_step(cfg: ModelConfig, p: dict, u: jnp.ndarray, cache: dict):
+    """u: [B, 1, d_model]; O(1) recurrent update."""
+    B = u.shape[0]
+    nh, hp, ds, di, kc = (cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state,
+                          cfg.d_inner, cfg.ssm_conv)
+    z, x, Bm, Cm, dt_raw = _project(cfg, p, u)
+    feat = jnp.concatenate([x, Bm, Cm], axis=-1)[:, 0, :]        # [B, di+2ds]
+    hist = jnp.concatenate([cache["conv"], feat[:, None, :]], axis=1)  # [B,kc,*]
+    w = jnp.concatenate(
+        [p["conv_x"], p["conv_B"], p["conv_C"]], axis=1).astype(feat.dtype)
+    conv_out = jax.nn.silu(jnp.einsum("bkd,kd->bd", hist, w))
+    x1, B1, C1 = jnp.split(conv_out, [di, di + ds], axis=-1)
+
+    dt = jax.nn.softplus(dt_raw[:, 0, :] + p["dt_bias"])         # [B, nh]
+    A = -jnp.exp(p["A_log"])
+    da = jnp.exp(dt * A)                                         # [B, nh]
+    xh = x1.reshape(B, nh, hp).astype(jnp.float32)
+    state = cache["state"] * da[:, :, None, None] + jnp.einsum(
+        "bh,bhp,bs->bhps", dt, xh, B1.astype(jnp.float32))
+    y = jnp.einsum("bs,bhps->bhp", C1.astype(jnp.float32), state)
+    y = y + p["D"][None, :, None] * xh
+    y = y.reshape(B, 1, di).astype(cdtype(cfg))
+    y = _gated_rmsnorm(y, z, p["norm"])
+    new_cache = {"conv": hist[:, 1:, :], "state": state}
+    return y @ p["wo"].astype(y.dtype), new_cache

@@ -1,0 +1,33 @@
+"""Serving steps: prefill (fill a cache from a prompt) and decode (one new
+token against a seq_len-deep cache). ``serve_step`` is what the decode_* and
+long_* dry-run cells lower."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import decode_step, forward
+from repro.models.config import ModelConfig
+
+__all__ = ["make_serve_step", "make_prefill_step"]
+
+
+def make_serve_step(cfg: ModelConfig, sample: str = "greedy"):
+    def serve_step(params, cache, tokens, pos):
+        """tokens: [B, 1] current token; pos: scalar position. Returns
+        (next_token [B, 1], logits [B, V], new_cache)."""
+        logits, cache = decode_step(cfg, params, cache, tokens, pos)
+        nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
+        return nxt, logits, cache
+
+    return serve_step
+
+
+def make_prefill_step(cfg: ModelConfig):
+    def prefill_step(params, batch):
+        """Run the prompt through the model, returning (last_logits, cache)."""
+        logits, _, caches = forward(cfg, params, batch, collect_cache=True,
+                                    remat=False)
+        return logits[:, -1, :], caches
+
+    return prefill_step

@@ -1,0 +1,349 @@
+"""Logical-axis -> mesh-axis sharding rules (MaxText-style GSPMD frontend).
+
+Two rule tables ship by default:
+
+  * ``TRAIN_RULES`` — FSDP(+pod) over parameters ("embed" -> data axes, i.e.
+    ZeRO-3: optimizer state and params sharded over the data-parallel axes),
+    Megatron TP over heads / mlp / vocab / experts, batch DP over (pod, data).
+  * ``SERVE_RULES`` — pure TP for weights (params replicated over data — no
+    optimizer states at inference), batch over (pod, data), KV-cache sequence
+    dim sharded over model when KV heads don't divide the model axis
+    (flash-decode style; GSPMD inserts the partial-softmax reductions).
+
+Activations are annotated inside model code with :func:`shard_act` against the
+ambient rules installed by :func:`use_rules` — so model definitions stay
+mesh-agnostic and per-(arch x shape) overrides are pure data.
+"""
+from __future__ import annotations
+
+import contextlib
+import contextvars
+from dataclasses import dataclass, field, replace
+from typing import Optional, Sequence, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def _is_param_spec(x) -> bool:
+    # duck-typed to avoid a circular import (models.params imports nothing
+    # from sharding, but the models package __init__ pulls in transformer,
+    # which needs this module)
+    return type(x).__name__ == "ParamSpec" and hasattr(x, "axes")
+
+__all__ = [
+    "Rules", "TRAIN_RULES", "SERVE_RULES", "rules_for", "logical_to_spec",
+    "param_shardings", "shard_act", "use_rules", "current_rules",
+]
+
+MeshAxes = Union[None, str, tuple[str, ...]]
+
+
+@dataclass(frozen=True)
+class Rules:
+    """Mapping from logical axis name to mesh axis (or axes)."""
+
+    table: dict[str, MeshAxes]
+    name: str = "rules"
+
+    def get(self, logical: Optional[str]) -> MeshAxes:
+        if logical is None:
+            return None
+        return self.table.get(logical, None)
+
+    def override(self, name: str = "", **changes: MeshAxes) -> "Rules":
+        t = dict(self.table)
+        t.update(changes)
+        return Rules(t, name or self.name + "+")
+
+
+# --------------------------------------------------------------------- rules
+
+_DATA_AXES = ("pod", "data")   # collapse to what the mesh actually has
+
+TRAIN_RULES = Rules(
+    {
+        # ---- parameters
+        "layers": None,                  # scanned; never sharded
+        "embed": "data",                 # FSDP / ZeRO-3 shard dim
+        "embed_pod": ("pod", "data"),    # FSDP over pod too (multi-pod default)
+        "q_heads": "model",
+        "kv_heads": "model",
+        "head_dim": None,
+        "mlp": "model",
+        "vocab": "model",
+        "experts": "model",
+        "expert_mlp": None,
+        "conv": None,
+        "ssm_inner": "model",
+        "ssm_state": None,
+        "ssm_heads": "model",
+        "ssm_head_dim": None,
+        # ---- activations
+        "act_batch": ("pod", "data"),
+        "act_seq": None,
+        "act_embed": None,
+        "act_heads": "model",
+        "act_kv_heads": "model",
+        "act_mlp": "model",
+        "act_vocab": "model",
+        "act_kv_seq": None,
+        "act_experts": "model",
+        "act_groups": ("pod", "data"),
+        "act_ssm_inner": "model",
+        "act_ssm_heads": "model",
+    },
+    name="train",
+)
+
+SERVE_RULES = Rules(
+    {
+        "layers": None,
+        "embed": None,                   # params replicated over data at serve
+        "embed_pod": None,
+        "q_heads": "model",
+        "kv_heads": "model",
+        "head_dim": None,
+        "mlp": "model",
+        "vocab": "model",
+        "experts": "model",
+        "expert_mlp": None,
+        "conv": None,
+        "ssm_inner": "model",
+        "ssm_state": None,
+        "ssm_heads": "model",
+        "ssm_head_dim": None,
+        "act_batch": ("pod", "data"),
+        "act_seq": None,
+        "act_embed": None,
+        "act_heads": "model",
+        "act_kv_heads": "model",
+        "act_mlp": "model",
+        "act_vocab": "model",
+        "act_kv_seq": None,              # overridden to "model" for SP-KV decode
+        "act_experts": "model",
+        "act_groups": ("pod", "data"),
+        "act_ssm_inner": "model",
+        "act_ssm_heads": "model",
+    },
+    name="serve",
+)
+
+
+def rules_for(kind: str, cfg=None, mesh: Optional[Mesh] = None,
+              overrides: Optional[dict[str, MeshAxes]] = None) -> Rules:
+    """Pick the rule table for a shape kind ('train'|'prefill'|'decode') and
+    specialize it to the arch + mesh.
+
+    * decode: KV-cache seq goes to "model" when kv heads don't divide the
+      model axis (avoids GSPMD padding waste on the 8-kv-head archs);
+    * train: FSDP over pod as well when the mesh has a pod axis.
+    """
+    base = TRAIN_RULES if kind == "train" else SERVE_RULES
+    model_size = None
+    axes = ()
+    sizes: dict[str, int] = {}
+    if mesh is not None:
+        axes = tuple(mesh.axis_names)
+        sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+        model_size = sizes.get("model")
+    t: dict[str, MeshAxes] = {}
+    if kind == "train" and "pod" in axes:
+        t["embed"] = ("pod", "data")
+    if cfg is not None and getattr(cfg, "family", "") == "moe" and mesh is not None:
+        batch_shards = sizes.get("pod", 1) * sizes.get("data", 1)
+        expert_bytes = 3 * cfg.d_model * cfg.expert_d_ff * 2
+        # weight-gathering EP pays off only when the token bytes crossing the
+        # mesh dwarf the expert weights — true for train/prefill (1M tokens),
+        # inverted at decode (128 tokens vs 1.1 GB of experts; §Perf iter. 8)
+        fine_grained = (cfg.num_experts >= 32 and expert_bytes <= 64 * 2**20
+                        and kind != "decode")
+        if fine_grained:
+            # §Perf iteration 2 (deepseek-moe): the sort-based dispatch's
+            # scatter/gather over data-dependent indices cannot be partitioned
+            # by GSPMD when the slot tensors span the model axis — it falls
+            # back to replicate+mask+all-reduce of [G, Tg*k, d]-sized tensors
+            # (measured 51 GB per op). Fine-grained experts are tiny, so
+            # invert the movement: dispatch groups shard over EVERY mesh axis
+            # (fully token-local scatter/gather) and the expert weights are
+            # all-gathered on use (<< token bytes).
+            t["act_groups"] = tuple(a for a in ("pod", "data", "model")
+                                    if a in axes)
+            t["act_experts"] = None
+            t["act_expert_mlp"] = None
+            group_shards = batch_shards * (model_size or 1)
+            if cfg.moe_groups % max(group_shards, 1):
+                t["act_groups"] = None
+        else:
+            if cfg.moe_groups % batch_shards:
+                # scatter/gather through a *padded* group dim corrupts
+                # dispatch (GSPMD pads uneven dims); replicate groups instead
+                t["act_groups"] = None
+            if model_size and cfg.num_experts % model_size:
+                # grok-1: 8 experts on a 16-way model axis — shard the expert
+                # FFN dim (TP-within-expert) instead of the expert dim
+                t["experts"] = None
+                t["act_experts"] = None
+                t["expert_mlp"] = "model"
+                t["act_expert_mlp"] = "model"
+    if kind == "decode" and cfg is not None and model_size:
+        kv = getattr(cfg, "num_kv_heads", 0)
+        if kv and kv % model_size != 0:
+            # flash-decode: shard the cache's sequence dim instead of heads
+            t["act_kv_seq"] = "model"
+            t["act_kv_heads"] = None
+            t["act_heads"] = None if cfg.num_heads % model_size else "model"
+    if overrides:
+        t.update(overrides)
+    out = base.override(f"{base.name}:{kind}", **t) if t else base
+    # drop mesh axes the mesh doesn't have (e.g. single-pod has no "pod")
+    if mesh is not None:
+        cleaned = {}
+        for k, v in out.table.items():
+            if v is None:
+                cleaned[k] = None
+            elif isinstance(v, str):
+                cleaned[k] = v if v in axes else None
+            else:
+                kept = tuple(a for a in v if a in axes)
+                cleaned[k] = kept if kept else None
+        out = Rules(cleaned, out.name)
+    return out
+
+
+# ----------------------------------------------------------------- plumbing
+
+def logical_to_spec(rules: Rules, logical_axes: Sequence[Optional[str]],
+                    shape: Optional[Sequence[int]] = None,
+                    mesh: Optional[Mesh] = None) -> P:
+    """Map logical axes to a PartitionSpec.
+
+    When ``shape`` + ``mesh`` are provided, mesh axes that do not divide the
+    dimension are dropped (suffix-first): jit input shardings REQUIRE even
+    divisibility (unlike with_sharding_constraint, which pads), so e.g. a
+    1-kv-head weight on a 16-way model axis degrades to replicated, and a
+    256206-vocab embedding drops the model axis. This keeps every
+    (arch x shape x mesh) cell lowerable without per-arch special-casing;
+    the roofline then shows what the degradation costs.
+    """
+    sizes = dict(mesh.shape) if mesh is not None else {}   # Mesh or AbstractMesh
+    used: set[str] = set()
+    parts = []
+    for i, ax in enumerate(logical_axes):
+        mesh_ax = rules.get(ax)
+        if mesh_ax is None:
+            parts.append(None)
+            continue
+        if isinstance(mesh_ax, str):
+            mesh_ax = (mesh_ax,)
+        kept = tuple(a for a in mesh_ax if a not in used)
+        if shape is not None and sizes:
+            dim = shape[i]
+            while kept:
+                prod = 1
+                for a in kept:
+                    prod *= sizes.get(a, 1)
+                if prod and dim % prod == 0:
+                    break
+                kept = kept[:-1]          # drop the innermost axis first
+        used.update(kept)
+        parts.append(kept if len(kept) > 1 else (kept[0] if kept else None))
+    return P(*parts)
+
+
+def param_shardings(specs, mesh: Mesh, rules: Rules):
+    """NamedSharding tree matching a ParamSpec tree (divisibility-degraded)."""
+    return jax.tree.map(
+        lambda s: NamedSharding(
+            mesh, logical_to_spec(rules, s.axes, s.shape, mesh)),
+        specs,
+        is_leaf=_is_param_spec,
+    )
+
+
+def named_sharding_for(shape: Sequence[int],
+                       logical_axes: Sequence[Optional[str]],
+                       mesh: Mesh, rules: Rules) -> NamedSharding:
+    """Divisibility-degraded NamedSharding for an arbitrary array shape."""
+    return NamedSharding(mesh, logical_to_spec(rules, logical_axes, shape, mesh))
+
+
+_current_rules: contextvars.ContextVar[Optional[Rules]] = contextvars.ContextVar(
+    "repro_sharding_rules", default=None
+)
+
+
+@contextlib.contextmanager
+def use_rules(rules: Optional[Rules]):
+    """Install ambient rules for :func:`shard_act` (used while tracing)."""
+    tok = _current_rules.set(rules)
+    try:
+        yield
+    finally:
+        _current_rules.reset(tok)
+
+
+def current_rules() -> Optional[Rules]:
+    return _current_rules.get()
+
+
+def _ambient_mesh():
+    try:
+        m = jax.sharding.get_abstract_mesh()
+        if m is not None and m.axis_names:
+            return m
+    except Exception:
+        pass
+    return None
+
+
+def shard_act(x, logical_axes: Sequence[Optional[str]]):
+    """Annotate an activation with logical axes; no-op outside `use_rules`
+    (keeps single-device smoke tests annotation-free). Mesh axes that do not
+    divide the dimension are dropped (GSPMD padding on uneven constraint dims
+    causes replicate+all-reduce round-trips)."""
+    rules = current_rules()
+    if rules is None:
+        return x
+    spec = logical_to_spec(rules, logical_axes, x.shape, _ambient_mesh())
+    return jax.lax.with_sharding_constraint(x, spec)
+
+
+# storage logical axis -> compute-time logical axis: the FSDP ("embed") dim
+# is GATHERED at use, tensor-parallel dims stay sharded
+_PARAM_COMPUTE_AXES = {
+    "embed": None,          # FSDP: all-gather before the matmul
+    "embed_pod": None,
+    "q_heads": "act_heads",
+    "kv_heads": "act_kv_heads",
+    "mlp": "act_mlp",
+    "vocab": "act_vocab",
+    "experts": "act_experts",
+    "expert_mlp": "act_expert_mlp",
+    "ssm_inner": "act_ssm_inner",
+    "ssm_heads": "act_ssm_heads",
+    "ssm_state": None,
+    "conv": None,
+    "head_dim": None,
+    "layers": None,
+}
+
+
+def use_param(w, storage_axes: Sequence[Optional[str]]):
+    """Pin a weight to its COMPUTE sharding at the use site (FSDP all-gather
+    of the "embed" dim, TP dims unchanged).
+
+    Without this, GSPMD propagates the storage sharding (embed@data) into
+    dot outputs, where it conflicts with batch@data — the partitioner then
+    replicates the batch dim and emits full-batch f32 all-reduces in the
+    BACKWARD pass (measured 25.7 GB/op at deepseek scale; §Perf iteration 5).
+    Pinning the gather makes the FSDP cost explicit: one bf16 weight
+    all-gather per use, exactly ZeRO-3 semantics.
+    """
+    rules = current_rules()
+    if rules is None:
+        return w
+    compute_axes = tuple(_PARAM_COMPUTE_AXES.get(a, None) if a else None
+                         for a in storage_axes)
+    spec = logical_to_spec(rules, compute_axes, w.shape, _ambient_mesh())
+    return jax.lax.with_sharding_constraint(w, spec)

@@ -1,0 +1,11 @@
+from repro.train.optimizer import (
+    AdamWHyper,
+    adamw_state_specs,
+    adamw_update,
+)
+from repro.train.step import TrainHyper, make_train_step, train_state_specs
+
+__all__ = [
+    "AdamWHyper", "adamw_state_specs", "adamw_update",
+    "TrainHyper", "make_train_step", "train_state_specs",
+]

@@ -1,0 +1,110 @@
+"""AdamW with ZeRO-3 sharded state.
+
+Moment tensors are declared as ParamSpecs with the *same logical axes* as
+their parameters, so the FSDP rule ("embed" -> data axes) shards optimizer
+state exactly like ZeRO-3 — each data shard owns 1/N of m/v and of the
+parameters it updates; XLA's SPMD partitioner inserts the all-gathers on use
+and keeps the update fully sharded.
+
+Also here: int8 gradient compression with error feedback (an opt-in
+distributed-optimization trick for DCN-crossing gradient reduction), and a
+cosine LR schedule.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.params import ParamSpec
+
+__all__ = [
+    "AdamWHyper", "adamw_state_specs", "adamw_update", "cosine_lr",
+    "compress_int8", "decompress_int8",
+]
+
+
+@dataclass(frozen=True)
+class AdamWHyper:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10000
+
+
+def cosine_lr(h: AdamWHyper, step: jnp.ndarray) -> jnp.ndarray:
+    warm = jnp.minimum(step / jnp.maximum(h.warmup_steps, 1), 1.0)
+    prog = jnp.clip((step - h.warmup_steps)
+                    / jnp.maximum(h.total_steps - h.warmup_steps, 1), 0.0, 1.0)
+    return h.lr * warm * 0.5 * (1.0 + jnp.cos(jnp.pi * prog))
+
+
+def adamw_state_specs(param_specs: Any) -> dict:
+    """m/v ParamSpec trees mirroring the parameter tree (f32, same axes)."""
+    def f32(s: ParamSpec) -> ParamSpec:
+        return ParamSpec(s.shape, s.axes, init="zeros", dtype=jnp.float32)
+    is_spec = lambda x: isinstance(x, ParamSpec)
+    return {
+        "m": jax.tree.map(f32, param_specs, is_leaf=is_spec),
+        "v": jax.tree.map(f32, param_specs, is_leaf=is_spec),
+    }
+
+
+def _global_norm(tree) -> jnp.ndarray:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                        for g in jax.tree.leaves(tree)))
+
+
+def adamw_update(params, grads, m, v, step, h: AdamWHyper):
+    """One AdamW step in f32 math over (possibly bf16) params."""
+    gnorm = _global_norm(grads)
+    scale = jnp.minimum(1.0, h.grad_clip / (gnorm + 1e-9))
+    lr = cosine_lr(h, step)
+    t = (step + 1).astype(jnp.float32)
+    bc1 = 1.0 - h.b1 ** t
+    bc2 = 1.0 - h.b2 ** t
+
+    def upd(p, g, m_, v_):
+        g = g.astype(jnp.float32) * scale
+        m2 = h.b1 * m_ + (1.0 - h.b1) * g
+        v2 = h.b2 * v_ + (1.0 - h.b2) * g * g
+        mhat = m2 / bc1
+        vhat = v2 / bc2
+        delta = mhat / (jnp.sqrt(vhat) + h.eps)
+        if p.ndim >= 2:  # decoupled weight decay on matrices only
+            delta = delta + h.weight_decay * p.astype(jnp.float32)
+        p2 = p.astype(jnp.float32) - lr * delta
+        return p2.astype(p.dtype), m2, v2
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = jax.tree.leaves(grads)
+    flat_m = jax.tree.leaves(m)
+    flat_v = jax.tree.leaves(v)
+    out = [upd(p, g, m_, v_) for p, g, m_, v_ in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = jax.tree.unflatten(treedef, [o[0] for o in out])
+    new_m = jax.tree.unflatten(treedef, [o[1] for o in out])
+    new_v = jax.tree.unflatten(treedef, [o[2] for o in out])
+    return new_p, new_m, new_v, {"grad_norm": gnorm, "lr": lr}
+
+
+# ----------------------------------------------------- gradient compression
+
+def compress_int8(g: jnp.ndarray, err: jnp.ndarray):
+    """Error-feedback int8 quantization: returns (q, scale, new_err).
+    Used before DCN-crossing (pod-axis) gradient reduction — 4x fewer bytes
+    on the slowest link; the quantization error re-enters the next step."""
+    gf = g.astype(jnp.float32) + err
+    scale = jnp.maximum(jnp.max(jnp.abs(gf)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(gf / scale), -127, 127).astype(jnp.int8)
+    new_err = gf - q.astype(jnp.float32) * scale
+    return q, scale, new_err
+
+
+def decompress_int8(q: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
+    return q.astype(jnp.float32) * scale

@@ -1,0 +1,108 @@
+"""Training step construction: loss -> grads (with microbatch accumulation)
+-> AdamW -> new state. Pure function of (state, batch); jit/pjit-ready.
+
+Gradient accumulation scans over microbatches with f32 accumulators; XLA's
+SPMD pass turns the per-microbatch gradient contributions into
+reduce-scatters against the FSDP-sharded accumulator, which overlaps with the
+next microbatch's compute (latency-hiding scheduler).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import loss_fn, param_specs
+from repro.models.config import ModelConfig
+from repro.models.params import ParamSpec
+from repro.train.optimizer import AdamWHyper, adamw_state_specs, adamw_update
+
+__all__ = ["TrainHyper", "train_state_specs", "make_train_step", "init_state"]
+
+
+@dataclass(frozen=True)
+class TrainHyper:
+    adamw: AdamWHyper = field(default_factory=AdamWHyper)
+    grad_accum: int = 1
+    # error-feedback int8 gradient quantization (opt-in): models DCN-
+    # compressed gradient exchange on the pod axis — 4x fewer bytes on the
+    # slowest link; the residual re-enters the next step via the `err` state
+    compress_grads: bool = False
+
+
+def train_state_specs(cfg: ModelConfig, hyper: Optional["TrainHyper"] = None
+                      ) -> dict:
+    ps = param_specs(cfg)
+    opt = adamw_state_specs(ps)
+    state = {
+        "params": ps,
+        "m": opt["m"],
+        "v": opt["v"],
+        "step": ParamSpec((), (), init="zeros", dtype=jnp.int32),
+    }
+    if hyper is not None and hyper.compress_grads:
+        state["err"] = opt["m"]   # same f32/axes tree: the EF residual
+    return state
+
+
+def init_state(cfg: ModelConfig, key, hyper: Optional["TrainHyper"] = None
+               ) -> dict:
+    from repro.models.params import init_params
+    return init_params(train_state_specs(cfg, hyper), key)
+
+
+def make_train_step(cfg: ModelConfig, hyper: TrainHyper):
+    accum = max(hyper.grad_accum, 1)
+
+    def grads_of(params, batch):
+        (loss, metrics), grads = jax.value_and_grad(
+            lambda p: loss_fn(cfg, p, batch), has_aux=True)(params)
+        return loss, metrics, grads
+
+    def train_step(state, batch):
+        params = state["params"]
+        if accum == 1:
+            loss, metrics, grads = grads_of(params, batch)
+            grads = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+        else:
+            def micro(carry, mb):
+                acc, loss_sum = carry
+                loss, _, g = grads_of(params, mb)
+                acc = jax.tree.map(
+                    lambda a, gg: a + gg.astype(jnp.float32), acc, g)
+                return (acc, loss_sum + loss), None
+            mbs = jax.tree.map(
+                lambda x: x.reshape(accum, x.shape[0] // accum, *x.shape[1:]),
+                batch)
+            zeros = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (gsum, loss_sum), _ = jax.lax.scan(micro, (zeros, 0.0), mbs)
+            grads = jax.tree.map(lambda g: g / accum, gsum)
+            loss = loss_sum / accum
+            metrics = {}
+        new_err = None
+        if hyper.compress_grads:
+            # quantize the gradient signal through error-feedback int8 (the
+            # 4x-compressed DCN exchange); residual re-enters next step
+            from repro.train.optimizer import compress_int8, decompress_int8
+
+            def roundtrip(g, e):
+                q, s, e2 = compress_int8(g, e)
+                return decompress_int8(q, s), e2
+            pairs = jax.tree.map(roundtrip, grads, state["err"])
+            grads = jax.tree.map(lambda p: p[0], pairs,
+                                 is_leaf=lambda x: isinstance(x, tuple))
+            new_err = jax.tree.map(lambda p: p[1], pairs,
+                                   is_leaf=lambda x: isinstance(x, tuple))
+        new_p, new_m, new_v, opt_metrics = adamw_update(
+            params, grads, state["m"], state["v"], state["step"], hyper.adamw)
+        new_state = {"params": new_p, "m": new_m, "v": new_v,
+                     "step": state["step"] + 1}
+        if new_err is not None:
+            new_state["err"] = new_err
+        out_metrics = {"loss": loss, **opt_metrics}
+        return new_state, out_metrics
+
+    return train_step

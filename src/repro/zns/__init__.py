@@ -1,0 +1,26 @@
+"""Zoned Namespace (ZNS) storage substrate.
+
+Software emulation of an NVMe ZNS device (host-memory or file backed), faithful
+to the semantics the paper builds on: fixed-size zones, append-only writes at a
+per-zone write pointer, explicit zone states (EMPTY/OPEN/FULL/READ_ONLY),
+host-managed reset (garbage collection), and block-granular reads.
+"""
+from repro.zns.device import (
+    Zone,
+    ZoneState,
+    ZonedDevice,
+    ZNSError,
+    ZoneFullError,
+    ZoneStateError,
+    OutOfBoundsError,
+)
+
+__all__ = [
+    "Zone",
+    "ZoneState",
+    "ZonedDevice",
+    "ZNSError",
+    "ZoneFullError",
+    "ZoneStateError",
+    "OutOfBoundsError",
+]

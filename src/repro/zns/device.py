@@ -1,0 +1,265 @@
+"""Emulated NVMe Zoned Namespace (ZNS) device.
+
+Semantics mirror the NVMe ZNS command set the paper targets (TP 4053, ratified
+June 2020):
+
+  * the LBA space is divided into fixed-size zones;
+  * writes within a zone are append-only at the zone's write pointer
+    ("Zone Append" command);
+  * no in-place updates -- rewriting requires a host-managed ``reset_zone``;
+  * zones move through an explicit state machine
+    EMPTY -> (IMPLICITLY) OPEN -> FULL, with FINISH and RESET transitions
+    driven by the host;
+  * reads are block (LBA) granular and bounds-checked against the write
+    pointer.
+
+The device is backed either by host memory (default; fast, used by tests and
+the data/KV substrates) or by a memory-mapped file (persistence for the
+checkpoint store). Emulation knobs (``read_us_per_block``/``append_us_per_block``)
+let benchmarks model device bandwidth, as QEMU does for the paper.
+"""
+from __future__ import annotations
+
+import enum
+import threading
+from dataclasses import dataclass, field
+from pathlib import Path
+from typing import Optional
+
+import numpy as np
+
+__all__ = [
+    "ZoneState",
+    "Zone",
+    "ZonedDevice",
+    "ZNSError",
+    "ZoneFullError",
+    "ZoneStateError",
+    "OutOfBoundsError",
+]
+
+
+class ZNSError(Exception):
+    """Base error for ZNS protocol violations."""
+
+
+class ZoneFullError(ZNSError):
+    """Append past the end of a zone."""
+
+
+class ZoneStateError(ZNSError):
+    """Operation illegal in the zone's current state."""
+
+
+class OutOfBoundsError(ZNSError):
+    """Read beyond the write pointer / zone capacity."""
+
+
+class ZoneState(enum.Enum):
+    EMPTY = "empty"
+    OPEN = "open"           # implicitly opened by a first append
+    FULL = "full"           # write pointer reached capacity or host FINISHed
+    READ_ONLY = "read_only" # host transitioned (e.g. sealed checkpoint zone)
+    OFFLINE = "offline"     # dead zone (injected for fault-tolerance tests)
+
+
+@dataclass
+class Zone:
+    """Descriptor for one zone (mirrors the ZNS Zone Descriptor)."""
+
+    zone_id: int
+    start_lba: int            # first block of the zone in device LBA space
+    capacity_blocks: int      # writable blocks in the zone
+    write_pointer: int = 0    # next writable block, relative to start_lba
+    state: ZoneState = ZoneState.EMPTY
+    # Number of times this zone has been reset (wear proxy; the paper's GC
+    # statistics build on host-visible reset counts).
+    reset_count: int = 0
+    cond: threading.Condition = field(
+        default_factory=threading.Condition, repr=False, compare=False
+    )
+
+    @property
+    def remaining_blocks(self) -> int:
+        return self.capacity_blocks - self.write_pointer
+
+    @property
+    def is_writable(self) -> bool:
+        return self.state in (ZoneState.EMPTY, ZoneState.OPEN)
+
+
+class ZonedDevice:
+    """An emulated ZNS SSD: ``num_zones`` zones of ``zone_blocks`` blocks of
+    ``block_bytes`` bytes.
+
+    Defaults follow the paper's evaluation: 4 KiB blocks and 256 MiB zones
+    (65536 blocks/zone).
+    """
+
+    def __init__(
+        self,
+        num_zones: int = 8,
+        zone_bytes: int = 256 * 1024 * 1024,
+        block_bytes: int = 4096,
+        backing_file: Optional[Path | str] = None,
+        read_us_per_block: float = 0.0,
+        append_us_per_block: float = 0.0,
+        max_open_zones: int = 0,  # 0 = unlimited (QEMU default)
+    ):
+        if zone_bytes % block_bytes != 0:
+            raise ValueError("zone_bytes must be a multiple of block_bytes")
+        self.num_zones = int(num_zones)
+        self.block_bytes = int(block_bytes)
+        self.zone_blocks = int(zone_bytes // block_bytes)
+        self.zone_bytes = int(zone_bytes)
+        self.read_us_per_block = float(read_us_per_block)
+        self.append_us_per_block = float(append_us_per_block)
+        self.max_open_zones = int(max_open_zones)
+        self._lock = threading.RLock()
+
+        total_bytes = self.num_zones * self.zone_bytes
+        if backing_file is not None:
+            path = Path(backing_file)
+            mode = "r+" if path.exists() and path.stat().st_size == total_bytes else "w+"
+            self._buf = np.memmap(path, dtype=np.uint8, mode=mode, shape=(total_bytes,))
+            self._backing_file = path
+        else:
+            self._buf = np.zeros(total_bytes, dtype=np.uint8)
+            self._backing_file = None
+
+        self.zones = [
+            Zone(zone_id=z, start_lba=z * self.zone_blocks,
+                 capacity_blocks=self.zone_blocks)
+            for z in range(self.num_zones)
+        ]
+        # device-level statistics (host-visible, like NVMe log pages)
+        self.stats = {
+            "blocks_read": 0,
+            "blocks_appended": 0,
+            "zone_resets": 0,
+            "zone_finishes": 0,
+        }
+
+    # ------------------------------------------------------------------ zones
+    def zone(self, zone_id: int) -> Zone:
+        if not 0 <= zone_id < self.num_zones:
+            raise OutOfBoundsError(f"zone {zone_id} out of range [0,{self.num_zones})")
+        return self.zones[zone_id]
+
+    def report_zones(self) -> list[Zone]:
+        """ZNS 'Zone Management Receive / Report Zones'."""
+        return list(self.zones)
+
+    def open_zones(self) -> list[Zone]:
+        return [z for z in self.zones if z.state == ZoneState.OPEN]
+
+    # ----------------------------------------------------------------- append
+    def zone_append(self, zone_id: int, data: np.ndarray | bytes) -> int:
+        """ZNS 'Zone Append': write ``data`` at the zone's write pointer.
+
+        ``data`` must be a whole number of blocks (the device pads the final
+        block with zeros, as a ZNS host library would). Returns the starting
+        block index *relative to the zone* at which data landed.
+        """
+        raw = np.frombuffer(data, dtype=np.uint8) if isinstance(data, (bytes, bytearray)) \
+            else np.ascontiguousarray(data).view(np.uint8).reshape(-1)
+        nblocks = -(-raw.size // self.block_bytes)  # ceil
+        with self._lock:
+            z = self.zone(zone_id)
+            if z.state == ZoneState.EMPTY:
+                if self.max_open_zones and len(self.open_zones()) >= self.max_open_zones:
+                    raise ZoneStateError("max open zones exceeded")
+                z.state = ZoneState.OPEN
+            if not z.is_writable:
+                raise ZoneStateError(f"zone {zone_id} not writable (state={z.state})")
+            if nblocks > z.remaining_blocks:
+                raise ZoneFullError(
+                    f"append of {nblocks} blocks exceeds zone {zone_id} "
+                    f"remaining {z.remaining_blocks}"
+                )
+            start_rel = z.write_pointer
+            off = (z.start_lba + start_rel) * self.block_bytes
+            self._buf[off : off + raw.size] = raw
+            pad = nblocks * self.block_bytes - raw.size
+            if pad:
+                self._buf[off + raw.size : off + raw.size + pad] = 0
+            z.write_pointer += nblocks
+            if z.write_pointer == z.capacity_blocks:
+                z.state = ZoneState.FULL
+            self.stats["blocks_appended"] += nblocks
+            return start_rel
+
+    # ------------------------------------------------------------------- read
+    def read_blocks(self, zone_id: int, block_off: int, nblocks: int) -> np.ndarray:
+        """Read ``nblocks`` blocks starting at ``block_off`` (zone-relative).
+
+        Bounds-checked against the write pointer: reading unwritten blocks is
+        a protocol error (this is the check the offloaded program's
+        ``bpf_read`` hook relies on).
+        """
+        with self._lock:
+            z = self.zone(zone_id)
+            if z.state == ZoneState.OFFLINE:
+                raise ZoneStateError(f"zone {zone_id} is offline")
+            if block_off < 0 or nblocks < 0 or block_off + nblocks > z.write_pointer:
+                raise OutOfBoundsError(
+                    f"read [{block_off},{block_off + nblocks}) beyond write pointer "
+                    f"{z.write_pointer} of zone {zone_id}"
+                )
+            off = (z.start_lba + block_off) * self.block_bytes
+            out = np.array(self._buf[off : off + nblocks * self.block_bytes])
+            self.stats["blocks_read"] += nblocks
+            return out
+
+    def read_zone(self, zone_id: int) -> np.ndarray:
+        """Read every written block of a zone."""
+        z = self.zone(zone_id)
+        return self.read_blocks(zone_id, 0, z.write_pointer)
+
+    # -------------------------------------------------------- zone management
+    def finish_zone(self, zone_id: int) -> None:
+        """ZNS 'Zone Management Send / Finish': host seals the zone."""
+        with self._lock:
+            z = self.zone(zone_id)
+            if z.state not in (ZoneState.EMPTY, ZoneState.OPEN, ZoneState.FULL):
+                raise ZoneStateError(f"cannot finish zone in state {z.state}")
+            z.state = ZoneState.FULL
+            self.stats["zone_finishes"] += 1
+
+    def set_read_only(self, zone_id: int) -> None:
+        with self._lock:
+            self.zone(zone_id).state = ZoneState.READ_ONLY
+
+    def reset_zone(self, zone_id: int) -> None:
+        """ZNS 'Zone Management Send / Reset': host-managed GC.
+
+        All data in the zone is discarded and the write pointer rewinds to 0.
+        This is the paper's host-visible garbage-collection primitive.
+        """
+        with self._lock:
+            z = self.zone(zone_id)
+            if z.state == ZoneState.OFFLINE:
+                raise ZoneStateError(f"zone {zone_id} is offline")
+            z.write_pointer = 0
+            z.state = ZoneState.EMPTY
+            z.reset_count += 1
+            self.stats["zone_resets"] += 1
+
+    def set_offline(self, zone_id: int) -> None:
+        """Fault injection: mark a zone dead (used by fault-tolerance tests)."""
+        with self._lock:
+            self.zone(zone_id).state = ZoneState.OFFLINE
+
+    # ------------------------------------------------------------------ misc
+    def flush(self) -> None:
+        if self._backing_file is not None:
+            self._buf.flush()
+
+    @property
+    def lba_size(self) -> int:
+        """Block size in bytes (the ``bpf_get_lba_size`` hook's answer)."""
+        return self.block_bytes
+
+    def utilization(self) -> float:
+        written = sum(z.write_pointer for z in self.zones)
+        return written / float(self.num_zones * self.zone_blocks)

@@ -1,0 +1,110 @@
+"""Zone data pipeline: pushdown filtering, movement-saved accounting,
+hedged prefetch straggler mitigation."""
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import CsdTier
+from repro.data import PrefetchLoader, ZoneDataPipeline, ZoneDataStore
+from repro.zns import ZonedDevice
+
+
+def make_store(seq_len=127, zones=2, zone_kib=512):
+    dev = ZonedDevice(num_zones=zones, zone_bytes=zone_kib * 1024,
+                      block_bytes=4096)
+    return ZoneDataStore(dev, seq_len)
+
+
+def fill(store, zone_id, n, seed=0, q_lo=0, q_hi=100):
+    rng = np.random.default_rng(seed)
+    toks = rng.integers(0, 50000, (n, store.seq_len), dtype=np.int32)
+    quality = rng.integers(q_lo, q_hi, n, dtype=np.int32)
+    store.append_records(zone_id, toks, quality)
+    return toks, quality
+
+
+def test_stride_alignment():
+    s1 = make_store(seq_len=127)     # 128 divides 1024
+    assert s1.stride == 128 and s1.pages_per_record_unit == 1
+    s2 = make_store(seq_len=4096)    # padded to whole pages
+    assert s2.stride % 1024 == 0 and s2.stride >= 4097
+    assert s2.pages_per_record_unit == s2.stride // 1024
+
+
+def test_pushdown_filters_by_quality():
+    store = make_store()
+    toks, quality = fill(store, 0, 100, seed=1)
+    pipe = ZoneDataPipeline(store, batch=4, min_quality=50)
+    recs = pipe._zone_records(0)
+    want = (quality >= 50).sum()
+    assert recs.shape[0] == want
+    # surviving records carry the right tokens
+    survivors = toks[quality >= 50]
+    np.testing.assert_array_equal(recs[:, 1 : 1 + store.seq_len], survivors)
+    # padding sentinel records (quality -1) never leak
+    assert (recs[:, 0] >= 50).all()
+
+
+def test_movement_saved_accounting():
+    store = make_store()
+    fill(store, 0, 200, seed=2, q_lo=0, q_hi=100)
+    pipe = ZoneDataPipeline(store, batch=4, min_quality=90)  # ~10% selectivity
+    pipe._zone_records(0)
+    st = pipe.stats
+    assert st.records_seen >= 200
+    assert st.records_kept < st.records_seen * 0.3
+    assert st.movement_saved > 0
+    # low selectivity => large reduction
+    assert st.bytes_to_host < st.bytes_read_device * 0.5
+
+
+def test_batches_shapes_and_epochs():
+    store = make_store()
+    fill(store, 0, 64, seed=3)
+    fill(store, 1, 64, seed=4)
+    pipe = ZoneDataPipeline(store, batch=8, min_quality=0)
+    batches = list(pipe.batches([0, 1], epochs=2))
+    assert len(batches) == 2 * (128 // 8)
+    for b in batches:
+        assert b["tokens"].shape == (8, store.seq_len - 1)
+        assert b["labels"].shape == (8, store.seq_len - 1)
+        np.testing.assert_array_equal(b["tokens"][:, 1:], b["labels"][:, :-1])
+
+
+def test_pipeline_deterministic_replay():
+    """Same seed -> identical batch stream (required for resume replay)."""
+    store = make_store()
+    fill(store, 0, 64, seed=5)
+    p1 = ZoneDataPipeline(store, batch=8)
+    p2 = ZoneDataPipeline(store, batch=8)
+    for b1, b2 in zip(p1.batches([0], seed=7), p2.batches([0], seed=7)):
+        np.testing.assert_array_equal(b1["tokens"], b2["tokens"])
+
+
+def test_interp_and_jit_tier_agree_on_pipeline():
+    store = make_store()
+    toks, quality = fill(store, 0, 50, seed=6)
+    a = ZoneDataPipeline(store, batch=4, min_quality=30, tier=CsdTier.JIT)
+    b = ZoneDataPipeline(store, batch=4, min_quality=30, tier=CsdTier.INTERP)
+    np.testing.assert_array_equal(a._zone_records(0), b._zone_records(0))
+
+
+def test_prefetch_loader_hedges_stragglers():
+    """A slow producer triggers hedged fetches instead of stalling."""
+    def slow_gen():
+        for i in range(6):
+            if i == 2:
+                time.sleep(0.35)        # straggling zone read
+            yield {"i": np.asarray([i])}
+
+    loader = PrefetchLoader(slow_gen(), depth=1, hedge_seconds=0.05)
+    got = [int(b["i"][0]) for b in loader]
+    assert sorted(got) == list(range(6))   # nothing lost, order preserved-ish
+    assert loader.hedged_fetches >= 1
+
+
+def test_prefetch_loader_clean_exhaustion():
+    loader = PrefetchLoader(iter([{"i": np.zeros(1)}] * 3), depth=2,
+                            hedge_seconds=0.2)
+    assert len(list(loader)) == 3

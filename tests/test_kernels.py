@@ -1,0 +1,173 @@
+"""Pallas kernel validation (interpret=True on CPU) against pure-jnp oracles,
+with hypothesis sweeps over shapes/dtypes and the verified-Program bridge."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import CsdTier, NvmCsd, filter_count, run_oracle
+from repro.core.programs import Instruction, OpCode, Program
+from repro.kernels.zone_filter.kernel import filtered_reduce_pallas
+from repro.kernels.zone_filter.ops import (
+    kernelizable, run_program_kernel, zone_filter_count, zone_reduce,
+)
+from repro.kernels.zone_filter.ref import zone_filter_count_ref, zone_reduce_ref
+from repro.kernels.paged_attn.ops import paged_attention
+from repro.kernels.paged_attn.ref import paged_attention_ref
+from repro.zns import ZonedDevice
+
+
+# ------------------------------------------------------------- zone_filter
+
+def _pages(n_pages, page_elems, dtype, seed=0):
+    rng = np.random.default_rng(seed)
+    if np.dtype(dtype).kind == "f":
+        return jnp.asarray(rng.standard_normal((n_pages, page_elems)) * 50,
+                           dtype)
+    info = np.iinfo(dtype)
+    return jnp.asarray(rng.integers(info.min // 2, info.max // 2,
+                                    (n_pages, page_elems)), dtype)
+
+
+def test_zone_filter_count_matches_ref_paper_shape():
+    """Paper geometry (scaled): 4 KiB pages of int32."""
+    pages = _pages(2048, 1024, jnp.int32)
+    got = zone_filter_count(pages, 2**30)
+    want = zone_filter_count_ref(pages, 2**30)
+    assert int(got) == int(want)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    n_pages=st.sampled_from([1, 2, 8, 64, 200, 513]),
+    page_elems=st.sampled_from([128, 256, 1024]),
+    dtype=st.sampled_from(["int32", "float32"]),
+    kind=st.sampled_from(["count", "sum", "min", "max"]),
+    seed=st.integers(0, 2**16),
+)
+def test_zone_reduce_sweep(n_pages, page_elems, dtype, kind, seed):
+    pages = _pages(n_pages, page_elems, jnp.dtype(dtype), seed)
+    if kind == "sum" and dtype == "int32":
+        pages = (pages >> 21).astype(jnp.int32)   # keep exact in i32 partials
+    thr = 0 if dtype == "int32" else 0.0
+    got = zone_reduce(pages, kind, thr)
+    want = zone_reduce_ref(pages, kind, thr)
+    if kind == "sum" and dtype == "float32":
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-5)
+    else:
+        assert np.asarray(got) == np.asarray(want), (kind, dtype)
+
+
+@settings(max_examples=20, deadline=None)
+@given(block_pages=st.sampled_from([1, 3, 8, 64, 512, 4096]),
+       seed=st.integers(0, 2**16))
+def test_zone_filter_block_shape_invariance(block_pages, seed):
+    """Any VMEM block tiling gives the identical result (tiling is a pure
+    performance knob — the system invariant hypothesis checks)."""
+    pages = _pages(96, 256, jnp.int32, seed)
+    want = zone_filter_count_ref(pages, 12345)
+    got = zone_filter_count(pages, 12345, block_pages=block_pages)
+    assert int(got) == int(want)
+
+
+PROGRAMS = [
+    filter_count("int32", "gt", 2**30),
+    filter_count("float32", "le", 0.0),
+    Program("int32", (Instruction(OpCode.AND, 0xFF), Instruction(OpCode.CMP_EQ, 7),
+                      Instruction(OpCode.RED_COUNT)), name="mask_eq"),
+    Program("float32", (Instruction(OpCode.MUL, 2.0),
+                        Instruction(OpCode.CMP_GE, 10.0),
+                        Instruction(OpCode.RED_SUM)), name="scaled_sum"),
+    Program("int32", (Instruction(OpCode.ABS), Instruction(OpCode.RED_MAX))),
+    Program("int32", (Instruction(OpCode.SHR, 3), Instruction(OpCode.CMP_GT, 1000),
+                      Instruction(OpCode.RED_MIN)), name="shift_min"),
+]
+
+
+@pytest.mark.parametrize("program", PROGRAMS, ids=lambda p: p.name)
+def test_program_kernel_tier_matches_oracle(program):
+    pages = np.asarray(_pages(64, 1024, jnp.dtype(program.input_dtype), 11))
+    assert kernelizable(program)
+    got = np.asarray(run_program_kernel(program, pages))
+    want = run_oracle(program, pages)
+    np.testing.assert_allclose(got, np.asarray(want, got.dtype), rtol=1e-6)
+
+
+def test_csd_kernel_tier_end_to_end():
+    """NvmCsd with tier=KERNEL: ZNS zone -> Pallas kernel -> scalar back."""
+    dev = ZonedDevice(num_zones=1, zone_bytes=1024 * 1024, block_bytes=4096)
+    rng = np.random.default_rng(5)
+    data = rng.integers(0, 2**31, (256, 1024), dtype=np.int32)
+    dev.zone_append(0, data)
+    csd = NvmCsd(dev)
+    program = filter_count("int32", "gt", 2**30)
+    stats = csd.nvm_cmd_bpf_run(program, 0, tier=CsdTier.KERNEL)
+    assert int(csd.nvm_cmd_bpf_result()) == int(run_oracle(program, data))
+    assert stats.bytes_returned <= 8
+    assert stats.movement_saved_bytes > 1_000_000
+
+
+def test_int_sum_not_kernelizable_falls_back():
+    """RED_SUM over ints must preserve i64 semantics -> JIT tier fallback."""
+    from repro.core import filter_sum
+    prog = filter_sum("int32", "gt", 0)
+    assert not kernelizable(prog)
+    dev = ZonedDevice(num_zones=1, zone_bytes=256 * 1024, block_bytes=4096)
+    data = np.random.default_rng(0).integers(-2**30, 2**30, (64, 1024),
+                                             dtype=np.int32)
+    dev.zone_append(0, data)
+    csd = NvmCsd(dev)
+    csd.nvm_cmd_bpf_run(prog, 0, tier=CsdTier.KERNEL)  # silently falls back
+    assert int(csd.nvm_cmd_bpf_result()) == int(run_oracle(prog, data))
+
+
+# -------------------------------------------------------------- paged_attn
+
+def _paged_case(B, H, KV, hd, NZ, ZL, MZ, seed=0, dtype=jnp.float32):
+    rng = np.random.default_rng(seed)
+    q = jnp.asarray(rng.standard_normal((B, H, hd)), dtype)
+    k = jnp.asarray(rng.standard_normal((NZ, ZL, KV, hd)), dtype)
+    v = jnp.asarray(rng.standard_normal((NZ, ZL, KV, hd)), dtype)
+    # each sequence gets a random set of distinct zones and a valid length
+    ztab = np.full((B, MZ), -1, np.int32)
+    lengths = np.zeros((B,), np.int32)
+    for b in range(B):
+        nz = rng.integers(1, MZ + 1)
+        ztab[b, :nz] = rng.choice(NZ, size=nz, replace=False)
+        lengths[b] = rng.integers(1, nz * ZL + 1)
+    return q, k, v, jnp.asarray(ztab), jnp.asarray(lengths)
+
+
+@pytest.mark.parametrize("B,H,KV,hd,NZ,ZL,MZ", [
+    (1, 4, 4, 32, 4, 16, 2),     # MHA
+    (2, 8, 2, 64, 8, 32, 3),     # GQA
+    (4, 8, 1, 128, 16, 128, 4),  # MQA, bigger zones
+])
+def test_paged_attention_matches_ref(B, H, KV, hd, NZ, ZL, MZ):
+    q, k, v, ztab, lengths = _paged_case(B, H, KV, hd, NZ, ZL, MZ, seed=B)
+    got = paged_attention(q, k, v, ztab, lengths)
+    want = paged_attention_ref(q, k, v, ztab, lengths)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**16))
+def test_paged_attention_random_tables(seed):
+    q, k, v, ztab, lengths = _paged_case(3, 6, 2, 32, 8, 16, 4, seed=seed)
+    got = paged_attention(q, k, v, ztab, lengths)
+    want = paged_attention_ref(q, k, v, ztab, lengths)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_paged_attention_bf16():
+    q, k, v, ztab, lengths = _paged_case(2, 8, 4, 64, 6, 32, 3, seed=9,
+                                         dtype=jnp.bfloat16)
+    got = paged_attention(q, k, v, ztab, lengths)
+    want = paged_attention_ref(q, k, v, ztab, lengths)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=2e-2, atol=2e-2)

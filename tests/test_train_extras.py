@@ -1,0 +1,180 @@
+"""Optimizer, gradient compression, LR schedule, sharding-rule invariants —
+property-based where the invariant is algebraic."""
+import os
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.train.optimizer import (
+    AdamWHyper, adamw_update, compress_int8, cosine_lr, decompress_int8,
+)
+from repro.sharding.rules import Rules, TRAIN_RULES, logical_to_spec, rules_for
+
+
+# ----------------------------------------------------------------- adamw
+
+def test_adamw_decreases_quadratic_loss():
+    h = AdamWHyper(lr=0.1, warmup_steps=0, total_steps=1000, weight_decay=0.0)
+    params = {"w": jnp.asarray([3.0, -2.0, 1.0])}
+    m = {"w": jnp.zeros(3)}
+    v = {"w": jnp.zeros(3)}
+    step = jnp.asarray(0)
+    for i in range(200):
+        grads = {"w": 2 * params["w"]}          # d/dw ||w||^2
+        params, m, v, _ = adamw_update(params, grads, m, v,
+                                       jnp.asarray(i), h)
+    assert float(jnp.abs(params["w"]).max()) < 0.3
+
+
+def test_adamw_grad_clip_applies():
+    h = AdamWHyper(lr=1e-3, grad_clip=1.0, warmup_steps=0)
+    params = {"w": jnp.ones(4)}
+    big = {"w": jnp.full(4, 1e6)}
+    _, _, _, metrics = adamw_update(params, big, {"w": jnp.zeros(4)},
+                                    {"w": jnp.zeros(4)}, jnp.asarray(0), h)
+    assert float(metrics["grad_norm"]) > 1e5     # reported pre-clip
+
+
+@given(step=st.integers(0, 10_000))
+@settings(max_examples=30, deadline=None)
+def test_cosine_lr_bounds(step):
+    h = AdamWHyper(lr=3e-4, warmup_steps=100, total_steps=10_000)
+    lr = float(cosine_lr(h, jnp.asarray(step, jnp.float32)))
+    assert 0.0 <= lr <= h.lr + 1e-9
+
+
+# ------------------------------------------------------- int8 compression
+
+@given(seed=st.integers(0, 2**16), scale=st.floats(1e-3, 1e3))
+@settings(max_examples=30, deadline=None)
+def test_int8_error_feedback_contract(seed, scale):
+    """decompress(compress(g)) + err' == g + err (no information lost)."""
+    rng = np.random.default_rng(seed)
+    g = jnp.asarray(rng.standard_normal(256) * scale, jnp.float32)
+    err = jnp.asarray(rng.standard_normal(256) * scale * 0.01, jnp.float32)
+    q, s, new_err = compress_int8(g, err)
+    assert q.dtype == jnp.int8
+    recon = decompress_int8(q, s)
+    np.testing.assert_allclose(np.asarray(recon + new_err),
+                               np.asarray(g + err), rtol=1e-5, atol=1e-5)
+
+
+def test_int8_error_feedback_converges():
+    """Accumulated error feedback keeps the long-run mean unbiased."""
+    rng = np.random.default_rng(0)
+    g_true = jnp.asarray(rng.standard_normal(64), jnp.float32)
+    err = jnp.zeros(64)
+    total = jnp.zeros(64)
+    N = 200
+    for _ in range(N):
+        q, s, err = compress_int8(g_true, err)
+        total = total + decompress_int8(q, s)
+    np.testing.assert_allclose(np.asarray(total / N), np.asarray(g_true),
+                               atol=2e-2)
+
+
+def test_compressed_training_still_learns():
+    """EF-int8 gradient round-trip in the train step keeps training sane:
+    loss trajectory close to the uncompressed run."""
+    from repro.configs import get_reduced
+    from repro.models.api import make_batch
+    from repro.models.params import init_params
+    from repro.train.step import TrainHyper, make_train_step, train_state_specs
+
+    cfg = get_reduced("h2o-danube-1.8b")
+    batches = [make_batch(cfg, 2, 32, seed=i) for i in range(6)]
+
+    def run(compress):
+        hyper = TrainHyper(compress_grads=compress)
+        state = init_params(train_state_specs(cfg, hyper),
+                            jax.random.PRNGKey(0))
+        step = jax.jit(make_train_step(cfg, hyper))
+        losses = []
+        for b in batches:
+            state, m = step(state, b)
+            losses.append(float(m["loss"]))
+        return losses
+
+    plain = run(False)
+    comp = run(True)
+    assert comp[-1] < comp[0]                       # still learning
+    assert abs(comp[-1] - plain[-1]) < 0.25          # close trajectory
+
+
+# ------------------------------------------------------- sharding rules
+
+def test_logical_to_spec_no_duplicate_axes():
+    spec = logical_to_spec(TRAIN_RULES, ("act_batch", "embed"))
+    flat = []
+    for part in spec:
+        if part is None:
+            continue
+        flat.extend(part if isinstance(part, tuple) else (part,))
+    assert len(flat) == len(set(flat)), f"mesh axis reused: {spec}"
+
+
+@given(dim=st.integers(1, 4096))
+@settings(max_examples=50, deadline=None)
+def test_divisibility_degradation(dim):
+    """Degraded specs always evenly divide the dim."""
+    import os
+    os.environ.setdefault("XLA_FLAGS",
+                          "--xla_force_host_platform_device_count=8")
+    import jax
+    if len(jax.devices()) < 8:
+        pytest.skip("needs 8 host devices")
+    mesh = jax.make_mesh((4, 2), ("data", "model"))
+    spec = logical_to_spec(TRAIN_RULES, ("q_heads",), (dim,), mesh)
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    part = spec[0]
+    if part is not None:
+        axes = part if isinstance(part, tuple) else (part,)
+        prod = int(np.prod([sizes[a] for a in axes]))
+        assert dim % prod == 0
+
+
+def test_rules_for_decode_kv_fallback():
+    import os
+    os.environ.setdefault("XLA_FLAGS",
+                          "--xla_force_host_platform_device_count=8")
+    import jax
+    from repro.configs import get_config
+    if len(jax.devices()) < 8:
+        pytest.skip("needs 8 host devices")
+    mesh = jax.make_mesh((4, 2), ("data", "model"))
+    # kv=1 on 2-way model axis -> SP-KV: seq carries the model axis
+    cfg = get_config("recurrentgemma-9b")
+    r = rules_for("decode", cfg, mesh)
+    assert r.get("act_kv_seq") == "model"
+    assert r.get("act_kv_heads") is None
+    # kv=16 divides -> heads keep the model axis
+    cfg2 = get_config("seamless-m4t-large-v2")
+    r2 = rules_for("decode", cfg2, mesh)
+    assert r2.get("act_kv_seq") is None
+
+
+def test_rules_for_moe_fine_vs_coarse():
+    import os
+    os.environ.setdefault("XLA_FLAGS",
+                          "--xla_force_host_platform_device_count=8")
+    import jax
+    from repro.configs import get_config
+    if len(jax.devices()) < 8:
+        pytest.skip("needs 8 host devices")
+    mesh = jax.make_mesh((4, 2), ("data", "model"))
+    fine = rules_for("train", get_config("deepseek-moe-16b"), mesh)
+    assert fine.get("act_groups") == ("data", "model")   # weight-gathering EP
+    # grok's 8 experts divide a 2-way axis -> expert-dim EP on this mesh
+    coarse = rules_for("train", get_config("grok-1-314b"), mesh)
+    assert coarse.get("experts") == "model"
+    # ...but NOT a non-dividing axis -> TP-within-expert fallback
+    mesh2 = jax.make_mesh((2, 4), ("data", "model"))
+    cfg6 = get_config("grok-1-314b").replace(num_experts=6)
+    fallback = rules_for("train", cfg6, mesh2)
+    assert fallback.get("expert_mlp") == "model"
+    assert fallback.get("experts") is None

@@ -1,0 +1,132 @@
+"""ZNS device semantics: zone states, append-only writes, bounds, reset/GC."""
+import numpy as np
+import pytest
+
+from repro.zns import (
+    OutOfBoundsError,
+    ZonedDevice,
+    ZoneFullError,
+    ZoneState,
+    ZoneStateError,
+)
+
+
+@pytest.fixture
+def dev():
+    # small device: 4 zones x 64 KiB, 4 KiB blocks
+    return ZonedDevice(num_zones=4, zone_bytes=64 * 1024, block_bytes=4096)
+
+
+def test_initial_state(dev):
+    assert all(z.state == ZoneState.EMPTY for z in dev.report_zones())
+    assert all(z.write_pointer == 0 for z in dev.report_zones())
+    assert dev.zone_blocks == 16
+    assert dev.lba_size == 4096
+
+
+def test_append_advances_write_pointer(dev):
+    data = np.arange(1024, dtype=np.int32)  # exactly one block
+    start = dev.zone_append(0, data)
+    assert start == 0
+    z = dev.zone(0)
+    assert z.write_pointer == 1 and z.state == ZoneState.OPEN
+    start2 = dev.zone_append(0, data)
+    assert start2 == 1  # append-only: lands at the write pointer
+
+
+def test_append_pads_partial_block(dev):
+    dev.zone_append(0, b"xyz")
+    out = dev.read_blocks(0, 0, 1)
+    assert bytes(out[:3]) == b"xyz"
+    assert not out[3:].any()
+
+
+def test_read_roundtrip(dev):
+    data = np.random.default_rng(0).integers(0, 2**31, 4096, dtype=np.int32)
+    dev.zone_append(1, data)
+    out = dev.read_blocks(1, 0, 4)
+    assert np.array_equal(np.frombuffer(out.tobytes(), dtype=np.int32), data)
+
+
+def test_read_beyond_write_pointer_rejected(dev):
+    dev.zone_append(0, np.zeros(1024, np.int32))
+    with pytest.raises(OutOfBoundsError):
+        dev.read_blocks(0, 0, 2)  # only 1 block written
+    with pytest.raises(OutOfBoundsError):
+        dev.read_blocks(0, -1, 1)
+
+
+def test_zone_full_and_overflow(dev):
+    whole = np.zeros(16 * 1024, np.uint8 if False else np.int32)[: 16 * 1024]
+    whole = np.zeros(16 * 1024, np.int32)  # 16 blocks = whole zone
+    dev.zone_append(2, whole)
+    assert dev.zone(2).state == ZoneState.FULL
+    with pytest.raises(ZoneStateError):
+        dev.zone_append(2, b"more")
+
+
+def test_append_larger_than_remaining_rejected(dev):
+    dev.zone_append(0, np.zeros(15 * 1024, np.int32))  # 15 of 16 blocks
+    with pytest.raises(ZoneFullError):
+        dev.zone_append(0, np.zeros(2 * 1024, np.int32))  # needs 2 blocks
+
+
+def test_reset_is_host_managed_gc(dev):
+    dev.zone_append(0, np.zeros(1024, np.int32))
+    dev.reset_zone(0)
+    z = dev.zone(0)
+    assert z.state == ZoneState.EMPTY and z.write_pointer == 0
+    assert z.reset_count == 1
+    with pytest.raises(OutOfBoundsError):
+        dev.read_blocks(0, 0, 1)  # data is gone from the host's view
+
+
+def test_finish_seals_zone(dev):
+    dev.zone_append(0, np.zeros(1024, np.int32))
+    dev.finish_zone(0)
+    assert dev.zone(0).state == ZoneState.FULL
+    with pytest.raises(ZoneStateError):
+        dev.zone_append(0, b"nope")
+
+
+def test_offline_zone_faults(dev):
+    dev.zone_append(0, np.zeros(1024, np.int32))
+    dev.set_offline(0)
+    with pytest.raises(ZoneStateError):
+        dev.read_blocks(0, 0, 1)
+    with pytest.raises(ZoneStateError):
+        dev.reset_zone(0)
+
+
+def test_max_open_zones():
+    dev = ZonedDevice(num_zones=4, zone_bytes=64 * 1024, block_bytes=4096,
+                      max_open_zones=2)
+    dev.zone_append(0, b"a")
+    dev.zone_append(1, b"b")
+    with pytest.raises(ZoneStateError):
+        dev.zone_append(2, b"c")
+
+
+def test_file_backed_persistence(tmp_path):
+    path = tmp_path / "zns.bin"
+    dev = ZonedDevice(num_zones=2, zone_bytes=64 * 1024, block_bytes=4096,
+                      backing_file=path)
+    payload = np.arange(2048, dtype=np.int32)
+    dev.zone_append(0, payload)
+    dev.flush()
+    # a new device over the same file sees the bytes (zone metadata is the
+    # checkpoint manifest's job, which re-derives write pointers on recovery)
+    dev2 = ZonedDevice(num_zones=2, zone_bytes=64 * 1024, block_bytes=4096,
+                       backing_file=path)
+    dev2.zone(0).write_pointer = 2  # recovery scan sets the pointer
+    out = dev2.read_blocks(0, 0, 2)
+    assert np.array_equal(np.frombuffer(out.tobytes(), np.int32), payload)
+
+
+def test_stats_accounting(dev):
+    dev.zone_append(0, np.zeros(2048, np.int32))
+    dev.read_blocks(0, 0, 2)
+    dev.reset_zone(0)
+    assert dev.stats["blocks_appended"] == 2
+    assert dev.stats["blocks_read"] == 2
+    assert dev.stats["zone_resets"] == 1
