@@ -1,0 +1,17 @@
+# CI entry points. `make ci` is what the tier-1 gate runs: the full pytest
+# suite plus a fast benchmark smoke (filter + array scaling).
+PYTHONPATH := src:$(PYTHONPATH)
+export PYTHONPATH
+
+.PHONY: test smoke ci bench
+
+test:
+	python -m pytest -x -q
+
+smoke:
+	python benchmarks/run.py --only filter,array
+
+ci: test smoke
+
+bench:
+	python benchmarks/run.py

@@ -1,0 +1,93 @@
+"""CSD array scaling: aggregate offload throughput from 1 to 8 devices.
+
+A fixed logical dataset is striped across N member devices whose read
+bandwidth is emulated (``read_us_per_block``, QEMU-style, as the paper does
+for its single device). The :class:`~repro.array.OffloadScheduler` fans a
+verified filter-count offload out across the members concurrently, so the
+aggregate device bandwidth — the bottleneck of any real CSD array — scales
+with N while the per-command result stays identical.
+
+Reported per width: steady-state offload microseconds, aggregate throughput
+in MiB/s of zone data scanned, and the speedup vs the 1-device array (the
+degenerate ``NvmCsd`` path). The paper's thesis at fleet scale: bytes moved
+to the host stay constant (8 per offload) while scan throughput multiplies.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.array import OffloadScheduler, StripedZoneArray
+from repro.core import filter_count
+from repro.zns import ZonedDevice
+
+RAND_MAX = 2**31 - 1
+
+
+def run_scaling(
+    *,
+    widths: tuple[int, ...] = (1, 2, 4, 8),
+    data_mib: int = 16,
+    stripe_blocks: int = 64,
+    read_us_per_block: float = 2.0,
+    runs: int = 3,
+    seed: int = 0,
+) -> list[dict]:
+    """Same logical data on arrays of increasing width; offload throughput
+    must rise monotonically with the member count."""
+    data_bytes = data_mib * 1024 * 1024
+    rng = np.random.default_rng(seed)
+    data = rng.integers(0, RAND_MAX, data_bytes // 4, dtype=np.int32)
+    expected = int((data > RAND_MAX // 2).sum())
+    program = filter_count("int32", "gt", RAND_MAX // 2)
+
+    out: list[dict] = []
+    for n in widths:
+        devices = [
+            ZonedDevice(num_zones=1, zone_bytes=data_bytes,
+                        block_bytes=4096,
+                        read_us_per_block=read_us_per_block)
+            for _ in range(n)
+        ]
+        with StripedZoneArray(devices, stripe_blocks=stripe_blocks) as array:
+            array.zone_append(0, data)
+            with OffloadScheduler(array) as sched:
+                stats = sched.nvm_cmd_bpf_run(program, 0)  # warm-up pays the JIT
+                jit_seconds = stats.jit_seconds
+                times = []
+                for _ in range(runs):
+                    t = time.perf_counter()
+                    stats = sched.nvm_cmd_bpf_run(program, 0)
+                    times.append(time.perf_counter() - t)
+                assert int(sched.nvm_cmd_bpf_result()) == expected
+        seconds = float(np.mean(times))
+        out.append({
+            "devices": n,
+            "seconds": seconds,
+            "mib_per_s": data_mib / seconds,
+            "jit_seconds": jit_seconds,
+            "chunks": stats.n_chunks,
+            "batched": stats.batched_chunks,
+            "bytes_to_host": stats.bytes_returned,
+        })
+    return out
+
+
+def main(data_mib: int = 16, runs: int = 3) -> list[str]:
+    rows = []
+    results = run_scaling(data_mib=data_mib, runs=runs)
+    base = results[0]["seconds"]
+    for r in results:
+        rows.append(
+            f"array_{r['devices']}dev,{r['seconds'] * 1e6:.0f},"
+            f"mib_per_s={r['mib_per_s']:.1f};speedup={base / r['seconds']:.2f}x;"
+            f"chunks={r['chunks']};batched={r['batched']};"
+            f"bytes_to_host={r['bytes_to_host']}"
+        )
+    return rows
+
+
+if __name__ == "__main__":
+    for row in main(data_mib=64, runs=3):
+        print(row)

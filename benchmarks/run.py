@@ -16,15 +16,18 @@ def main() -> int:
                     help="paper-exact sizes (256 MiB zone, 5 runs)")
     ap.add_argument("--only", default=None,
                     help="comma-separated subset: filter,toolchain,pushdown,"
-                         "checkpoint,paged_attn,roofline")
+                         "checkpoint,paged_attn,roofline,array")
     args = ap.parse_args()
 
-    from benchmarks import (bench_checkpoint, bench_filter, bench_paged_attn,
-                            bench_pushdown, bench_toolchain, roofline)
+    from benchmarks import (bench_array, bench_checkpoint, bench_filter,
+                            bench_paged_attn, bench_pushdown, bench_toolchain,
+                            roofline)
 
     suites = {
         "filter": lambda: bench_filter.main(
             zone_mib=256 if args.full else 32, runs=5 if args.full else 3),
+        "array": lambda: bench_array.main(
+            data_mib=64 if args.full else 16, runs=5 if args.full else 3),
         "toolchain": bench_toolchain.main,
         "pushdown": bench_pushdown.main,
         "checkpoint": bench_checkpoint.main,

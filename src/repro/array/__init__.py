@@ -1,0 +1,37 @@
+"""CSD array: multi-device striping + NVMe-style offload scheduling.
+
+The subsystem the paper defers as future work — asynchronous execution and
+multi-device operation — built on the repo's single-device primitives:
+
+  * :mod:`repro.array.striping`  — ``StripedZoneArray``: N ZNS devices as one
+    logical zoned address space (RAID-0 zone striping; ``ZonedDevice``
+    drop-in, so every existing consumer works unchanged);
+  * :mod:`repro.array.queues`    — NVMe-style per-tenant submission/completion
+    queue pairs with depth limits, backpressure, and weighted round-robin
+    arbitration;
+  * :mod:`repro.array.scheduler` — ``OffloadScheduler``: verify once, fan out
+    per device (vmapped-JIT batching for same-shape shards), scatter-gather
+    with a program-aware combiner, aggregated ``ArrayOffloadStats``.
+"""
+from repro.array.striping import LogicalZone, StripeChunk, StripedZoneArray
+from repro.array.queues import (
+    Completion,
+    CompletionQueue,
+    OffloadCommand,
+    QueueFullError,
+    QueuePair,
+    SubmissionQueue,
+    WeightedRoundRobinArbiter,
+)
+from repro.array.scheduler import (
+    ArrayOffloadError,
+    ArrayOffloadStats,
+    OffloadScheduler,
+)
+
+__all__ = [
+    "StripedZoneArray", "LogicalZone", "StripeChunk",
+    "SubmissionQueue", "CompletionQueue", "QueuePair", "QueueFullError",
+    "OffloadCommand", "Completion", "WeightedRoundRobinArbiter",
+    "OffloadScheduler", "ArrayOffloadStats", "ArrayOffloadError",
+]

@@ -1,0 +1,228 @@
+"""NVMe-style submission/completion queue pairs for offload commands.
+
+Mirrors the NVMe queueing model the paper's device sits behind: per-tenant
+submission queues (SQs) with bounded depth, one completion queue (CQ) per
+pair, and a weighted round-robin arbiter (the NVMe 'WRR with urgent priority'
+arbitration mechanism, minus the urgent class) that decides which SQ the
+device doorbell services next.
+
+Backpressure is explicit: a full SQ either rejects the command
+(``QueueFullError``, the NVMe 'queue full' status) or blocks the submitter
+until the arbiter drains a slot, so one chatty tenant cannot starve the
+device of queue slots.
+
+Commands carry *verified* programs: the scheduler verifies before enqueue, so
+everything past the SQ is admitted work (the same contract the paper's
+verifier gives the single device).
+"""
+from __future__ import annotations
+
+import itertools
+import threading
+import time
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Any, Optional, Sequence
+
+from repro.core.programs import Program
+
+__all__ = [
+    "QueueFullError",
+    "OffloadCommand",
+    "Completion",
+    "SubmissionQueue",
+    "CompletionQueue",
+    "QueuePair",
+    "WeightedRoundRobinArbiter",
+]
+
+
+class QueueFullError(Exception):
+    """Submission queue at depth limit (NVMe 'queue full' status)."""
+
+
+_cmd_ids = itertools.count(1)
+
+
+@dataclass
+class OffloadCommand:
+    """One verified offload submission (an NVMe command capsule analogue)."""
+
+    program: Program
+    zone_id: int
+    block_off: int
+    n_blocks: Optional[int]
+    tier: Optional[str]
+    tenant: str = "default"
+    cmd_id: int = field(default_factory=lambda: next(_cmd_ids))
+    insns_verified: int = 0
+
+
+@dataclass
+class Completion:
+    """CQ entry: result (or error) + the aggregated stats for the command."""
+
+    cmd_id: int
+    tenant: str
+    value: Any = None
+    stats: Any = None
+    error: Optional[BaseException] = None
+
+    @property
+    def ok(self) -> bool:
+        return self.error is None
+
+
+class SubmissionQueue:
+    """Bounded FIFO of offload commands for one tenant."""
+
+    def __init__(self, tenant: str, *, depth: int = 32, weight: int = 1):
+        if depth <= 0:
+            raise ValueError("queue depth must be positive")
+        if weight <= 0:
+            raise ValueError("arbitration weight must be positive")
+        self.tenant = tenant
+        self.depth = depth
+        self.weight = weight
+        self._q: deque[OffloadCommand] = deque()
+        self._cond = threading.Condition()
+        self.submitted = 0
+        self.rejected = 0
+
+    def submit(self, cmd: OffloadCommand, *, block: bool = False,
+               timeout: Optional[float] = None) -> None:
+        deadline = None if timeout is None else time.monotonic() + timeout
+        with self._cond:
+            if len(self._q) >= self.depth and not block:
+                self.rejected += 1
+                raise QueueFullError(
+                    f"SQ '{self.tenant}' full (depth={self.depth})")
+            while len(self._q) >= self.depth:
+                # honour the TOTAL deadline across wakeups (a woken submitter
+                # may lose its slot to a rival and have to wait again)
+                remaining = None if deadline is None \
+                    else deadline - time.monotonic()
+                if (remaining is not None and remaining <= 0) or \
+                        not self._cond.wait(timeout=remaining):
+                    self.rejected += 1
+                    raise QueueFullError(
+                        f"SQ '{self.tenant}' full after {timeout}s (depth="
+                        f"{self.depth})")
+            self._q.append(cmd)
+            self.submitted += 1
+
+    def pop(self) -> Optional[OffloadCommand]:
+        with self._cond:
+            if not self._q:
+                return None
+            cmd = self._q.popleft()
+            self._cond.notify()  # free a slot for a blocked submitter
+            return cmd
+
+    def __len__(self) -> int:
+        with self._cond:
+            return len(self._q)
+
+
+class CompletionQueue:
+    """Fixed-depth ring of completions (an NVMe CQ is a fixed-size ring: a
+    host that does not keep up loses the oldest entries, counted in
+    ``dropped``, rather than growing device memory without bound)."""
+
+    def __init__(self, tenant: str, *, depth: int = 256):
+        if depth <= 0:
+            raise ValueError("CQ depth must be positive")
+        self.tenant = tenant
+        self.depth = depth
+        self._q: deque[Completion] = deque(maxlen=depth)
+        self._cond = threading.Condition()
+        self.dropped = 0
+
+    def push(self, completion: Completion) -> None:
+        with self._cond:
+            if len(self._q) == self.depth:
+                self.dropped += 1  # ring overwrite of the oldest entry
+            self._q.append(completion)
+            self._cond.notify_all()
+
+    def pop(self, *, timeout: Optional[float] = None) -> Optional[Completion]:
+        with self._cond:
+            if not self._q and timeout is not None:
+                self._cond.wait(timeout=timeout)
+            return self._q.popleft() if self._q else None
+
+    def drain(self) -> list[Completion]:
+        with self._cond:
+            out = list(self._q)
+            self._q.clear()
+            return out
+
+    def __len__(self) -> int:
+        with self._cond:
+            return len(self._q)
+
+
+@dataclass
+class QueuePair:
+    """One tenant's SQ/CQ pair (NVMe I/O queue pair analogue)."""
+
+    sq: SubmissionQueue
+    cq: CompletionQueue
+
+    @property
+    def tenant(self) -> str:
+        return self.sq.tenant
+
+
+class WeightedRoundRobinArbiter:
+    """NVMe-style weighted round-robin over submission queues.
+
+    Each round grants SQ ``i`` up to ``weight_i`` command slots; queues are
+    serviced in order within the round, and empty queues forfeit their
+    remaining credit. With every queue kept full, the dispatch mix converges
+    to the weight ratio while staying work-conserving when queues run dry.
+    """
+
+    def __init__(self, pairs: Sequence[QueuePair] = ()):
+        self._pairs: list[QueuePair] = list(pairs)
+        self._lock = threading.Lock()
+        self._credits: list[int] = [p.sq.weight for p in self._pairs]
+        self._pos = 0
+
+    def add(self, pair: QueuePair) -> None:
+        with self._lock:
+            self._pairs.append(pair)
+            self._credits.append(pair.sq.weight)
+
+    @property
+    def pairs(self) -> list[QueuePair]:
+        return list(self._pairs)
+
+    def _refresh(self) -> None:
+        self._credits = [p.sq.weight for p in self._pairs]
+
+    def next_command(self) -> Optional[tuple[OffloadCommand, QueuePair]]:
+        """Pop the next command per WRR policy, or None if every SQ is empty."""
+        with self._lock:
+            if not self._pairs:
+                return None
+            n = len(self._pairs)
+            # at most two passes: one with current credits, one after refresh
+            for _ in range(2):
+                scanned = 0
+                while scanned < n:
+                    i = self._pos
+                    pair, credit = self._pairs[i], self._credits[i]
+                    if credit > 0:
+                        cmd = pair.sq.pop()
+                        if cmd is not None:
+                            self._credits[i] -= 1
+                            if self._credits[i] == 0:
+                                self._pos = (i + 1) % n
+                            return cmd, pair
+                    # empty queue forfeits its credit for this round
+                    self._credits[i] = 0
+                    self._pos = (i + 1) % n
+                    scanned += 1
+                self._refresh()
+            return None

@@ -1,0 +1,553 @@
+"""Offload scheduler: verified programs fanned out across a striped array.
+
+The single-device ``NvmCsd`` verifies and executes one extent synchronously.
+The :class:`OffloadScheduler` scales that contract to a
+:class:`~repro.array.striping.StripedZoneArray`:
+
+  1. **verify once** — the program is checked by the same static verifier
+     against the whole logical extent *before* it enters a submission queue;
+     everything past the SQ is admitted work;
+  2. **queue + arbitrate** — commands sit in per-tenant NVMe-style SQs with
+     depth limits and are dispatched by weighted round-robin (see
+     :mod:`repro.array.queues`);
+  3. **fan out** — the logical extent decomposes into stripe chunks, each
+     contiguous on exactly one member device; every device executes its
+     chunks concurrently on the existing interp/jit/kernel tiers. Same-shape
+     chunks on the JIT tier are batched into ONE vmapped XLA call per device
+     (:func:`repro.core.vm.jit_program_batched`);
+  4. **scatter-gather** — per-chunk results are re-combined in logical
+     stripe order by a program-aware combiner: SUM/COUNT re-add, MIN/MAX
+     re-reduce, HIST re-accumulates, SELECT/SELECT_REC concatenate the first
+     ``capacity`` matches in logical order — bit-identical to the
+     single-device result for COUNT/MIN/MAX/SELECT and for SUM over integer
+     streams (float SUM may differ by summation order, exactly as the tiers
+     already may);
+  5. **aggregate stats** — one :class:`ArrayOffloadStats` per command rolls
+     up bytes read on every member, bytes returned to the host, verify/JIT/
+     exec time, and the fan-out shape.
+
+A 1-device array degrades to the ``NvmCsd`` semantics — the degenerate path.
+"""
+from __future__ import annotations
+
+import concurrent.futures
+import threading
+import time
+from dataclasses import dataclass
+from typing import Optional
+
+import numpy as np
+
+from repro.core.csd import (
+    CsdTier,
+    OffloadStats,
+    execute_extent,
+    extent_geometry,
+    resolve_tier,
+)
+from repro.core.programs import OpCode, Program
+from repro.core.verifier import VerifierLimits, verify_program, verify_zone_access
+from repro.core.vm import _SUM_WIDEN, jit_program, jit_program_batched
+from repro.array.queues import (
+    Completion,
+    OffloadCommand,
+    QueuePair,
+    CompletionQueue,
+    SubmissionQueue,
+    WeightedRoundRobinArbiter,
+)
+from repro.array.striping import StripeChunk, StripedZoneArray
+from repro.zns.device import ZNSError
+
+__all__ = ["OffloadScheduler", "ArrayOffloadStats", "ArrayOffloadError"]
+
+
+class ArrayOffloadError(Exception):
+    """A member device failed mid-offload (e.g. an OFFLINE zone). The message
+    names the member so the operator can degrade/repair explicitly."""
+
+
+@dataclass
+class ArrayOffloadStats(OffloadStats):
+    """Per-command statistics aggregated over the whole array fan-out."""
+
+    n_devices: int = 1
+    n_chunks: int = 1
+    batched_chunks: int = 0        # chunks executed via the vmapped JIT path
+
+    @property
+    def fanout(self) -> str:
+        return f"{self.n_chunks} chunks / {self.n_devices} devices"
+
+
+class OffloadScheduler:
+    """NVMe-style scheduler over a striped zone array.
+
+    Exposes the same part-i API as :class:`~repro.core.csd.NvmCsd`
+    (``nvm_cmd_bpf_run`` / ``nvm_cmd_bpf_result`` / ``run_and_fetch``) so the
+    data pipeline and checkpoint store can treat a whole array as one CSD,
+    plus the queued API (``submit`` / ``drain`` / ``start`` / ``wait``).
+    """
+
+    def __init__(
+        self,
+        array: StripedZoneArray,
+        *,
+        default_tier: str = CsdTier.JIT,
+        pages_per_read: int = 1,
+        limits: VerifierLimits = VerifierLimits(),
+        max_workers: Optional[int] = None,
+        queue_depth: int = 64,
+        completion_backlog: int = 1024,
+    ):
+        if array.stripe_blocks % pages_per_read:
+            raise ValueError(
+                f"stripe_blocks {array.stripe_blocks} must be a multiple of "
+                f"pages_per_read {pages_per_read} (chunks must tile into pages)"
+            )
+        self.array = array
+        self.default_tier = default_tier
+        self.pages_per_read = int(pages_per_read)
+        self.limits = limits
+        self.queue_depth = queue_depth
+        self.completion_backlog = completion_backlog
+        self._pool = concurrent.futures.ThreadPoolExecutor(
+            max_workers=max_workers or max(array.n_devices, 1))
+        # one JIT cache per member device would also work; programs are
+        # device-agnostic so a shared cache maximizes reuse
+        self._jit_cache: dict = {}
+        self._batched_cache: dict = {}
+        self._pairs: dict[str, QueuePair] = {}
+        self._arbiter = WeightedRoundRobinArbiter()
+        self._completions: dict[int, Completion] = {}
+        self._watched: set[int] = set()   # cmd_ids a sync caller will wait() on
+        self._pending: set[int] = set()   # submitted, not yet completed
+        self._comp_cond = threading.Condition()
+        self._compile_lock = threading.Lock()
+        self._result: Optional[Completion] = None
+        self._thread: Optional[threading.Thread] = None
+        self._stop = threading.Event()
+        self._wake = threading.Event()
+        self.history: list[ArrayOffloadStats] = []
+        self.register_tenant("default")
+
+    # ------------------------------------------------------------ tenants
+    def register_tenant(self, tenant: str, *, weight: int = 1,
+                        depth: Optional[int] = None) -> QueuePair:
+        """Create an SQ/CQ pair for ``tenant`` with a WRR ``weight``."""
+        if tenant in self._pairs:
+            raise ValueError(f"tenant {tenant!r} already registered")
+        pair = QueuePair(
+            SubmissionQueue(tenant, depth=depth or self.queue_depth,
+                            weight=weight),
+            CompletionQueue(tenant, depth=self.completion_backlog),
+        )
+        self._pairs[tenant] = pair
+        self._arbiter.add(pair)
+        return pair
+
+    def queue_pair(self, tenant: str = "default") -> QueuePair:
+        return self._pairs[tenant]
+
+    # ------------------------------------------------------------- submit
+    def submit(
+        self,
+        program: Program,
+        zone_id: int,
+        *,
+        tenant: str = "default",
+        block_off: int = 0,
+        n_blocks: Optional[int] = None,
+        tier: Optional[str] = None,
+        block: bool = False,
+        timeout: Optional[float] = None,
+        _watch: bool = False,
+    ) -> int:
+        """Verify and enqueue an offload; returns the command id.
+
+        Verification happens HERE — a rejected program never occupies a queue
+        slot, and the SQ carries only admitted commands. A full SQ raises
+        :class:`~repro.array.queues.QueueFullError` unless ``block=True``
+        (backpressure).
+        """
+        pair = self._pairs[tenant]
+        zone = self.array.zone(zone_id)
+        if n_blocks is None:
+            n_blocks = zone.write_pointer - block_off
+        if block_off % self.pages_per_read:
+            raise ValueError(
+                f"block_off {block_off} not aligned to read granularity "
+                f"{self.pages_per_read}")
+        dtype = np.dtype(program.input_dtype)
+        page_elems, n_pages = extent_geometry(
+            self.array.block_bytes, dtype, n_blocks, self.pages_per_read)
+        insns_verified = verify_program(
+            program, page_elems=page_elems, n_pages=n_pages, limits=self.limits)
+        verify_zone_access(
+            zone_write_pointer=zone.write_pointer, block_off=block_off,
+            n_blocks=n_blocks)
+        cmd = OffloadCommand(
+            program=program, zone_id=zone_id, block_off=block_off,
+            n_blocks=n_blocks,
+            tier=resolve_tier(tier or self.default_tier, program),
+            tenant=tenant, insns_verified=insns_verified,
+        )
+        # register BEFORE the dispatcher can see the command: _pending lets
+        # wait() distinguish in-flight from evicted/unknown, and a watch
+        # protects a sync caller's completion from backlog eviction
+        with self._comp_cond:
+            self._pending.add(cmd.cmd_id)
+            if _watch:
+                self._watched.add(cmd.cmd_id)
+        try:
+            pair.sq.submit(cmd, block=block, timeout=timeout)
+        except BaseException:
+            with self._comp_cond:
+                self._pending.discard(cmd.cmd_id)
+                self._watched.discard(cmd.cmd_id)
+            raise
+        self._wake.set()
+        return cmd.cmd_id
+
+    # ----------------------------------------------------------- dispatch
+    def dispatch_one(self) -> bool:
+        """Arbitrate and execute ONE queued command. Returns False when every
+        SQ is empty."""
+        nxt = self._arbiter.next_command()
+        if nxt is None:
+            return False
+        cmd, pair = nxt
+        try:
+            value, stats = self._execute(cmd)
+            comp = Completion(cmd.cmd_id, cmd.tenant, value=value, stats=stats)
+            self.history.append(stats)
+        except Exception as e:  # surfaced via the CQ, never swallowed
+            comp = Completion(cmd.cmd_id, cmd.tenant, error=e)
+        with self._comp_cond:
+            watched = cmd.cmd_id in self._watched
+        if watched:
+            # a sync caller consumes the payload via wait(); give the CQ a
+            # payload-free record (stats/errors stay observable) so the ring
+            # does not pin up to `depth` dead result buffers
+            pair.cq.push(Completion(cmd.cmd_id, cmd.tenant, value=None,
+                                    stats=comp.stats, error=comp.error))
+        else:
+            pair.cq.push(comp)
+        with self._comp_cond:
+            self._completions[cmd.cmd_id] = comp
+            self._pending.discard(cmd.cmd_id)
+            # bound the wait() rendezvous: consumers that read the CQ directly
+            # never pop here, so evict oldest-first past the backlog limit —
+            # but never a completion a sync caller has reserved with a watch
+            while len(self._completions) > self.completion_backlog:
+                victim = next((k for k in self._completions
+                               if k not in self._watched), None)
+                if victim is None:
+                    break
+                self._completions.pop(victim)
+            self._result = comp
+            self._comp_cond.notify_all()
+        return True
+
+    def drain(self) -> int:
+        """Dispatch until every submission queue is empty (synchronous pump)."""
+        n = 0
+        while self.dispatch_one():
+            n += 1
+        return n
+
+    def wait(self, cmd_id: int, *, timeout: Optional[float] = None) -> Completion:
+        """Block until ``cmd_id`` completes (requires a running dispatcher or
+        a concurrent ``drain``)."""
+        deadline = None if timeout is None else time.monotonic() + timeout
+        with self._comp_cond:
+            while cmd_id not in self._completions:
+                if cmd_id not in self._pending:
+                    raise LookupError(
+                        f"command {cmd_id} has no pending completion (already "
+                        f"waited, evicted past completion_backlog, or unknown)")
+                remaining = None if deadline is None else deadline - time.monotonic()
+                if remaining is not None and remaining <= 0:
+                    raise TimeoutError(f"command {cmd_id} still pending")
+                self._comp_cond.wait(timeout=remaining)
+            self._watched.discard(cmd_id)
+            return self._completions.pop(cmd_id)
+
+    def start(self) -> None:
+        """Run the dispatcher on a background thread (async mode — the
+        paper's stated future extension, at array scope)."""
+        if self._thread is not None:
+            return
+        self._stop.clear()
+
+        def loop():
+            while not self._stop.is_set():
+                if not self.dispatch_one():
+                    self._wake.wait(timeout=0.01)
+                    self._wake.clear()
+
+        self._thread = threading.Thread(target=loop, daemon=True,
+                                        name="offload-dispatcher")
+        self._thread.start()
+
+    def stop(self) -> None:
+        if self._thread is None:
+            return
+        self._stop.set()
+        self._wake.set()
+        self._thread.join()
+        self._thread = None
+
+    def close(self) -> None:
+        """Stop the dispatcher (if running) and release the fan-out worker
+        threads. The scheduler is unusable afterwards; the array is not."""
+        self.stop()
+        self._pool.shutdown(wait=True)
+
+    def __enter__(self) -> "OffloadScheduler":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    # -------------------------------------------- NvmCsd-compatible part-i
+    def _run_sync(self, program: Program, zone_id: int, *,
+                  block_off: int = 0, n_blocks: Optional[int] = None,
+                  tier: Optional[str] = None,
+                  tenant: str = "default") -> Completion:
+        """Submit, wait, and return THIS command's completion (not the shared
+        last-result register, which another tenant may overwrite)."""
+        cmd_id = self.submit(program, zone_id, tenant=tenant,
+                             block_off=block_off, n_blocks=n_blocks, tier=tier,
+                             _watch=True)
+        if self._thread is None:
+            self.drain()
+        # unbounded wait is safe: either a dispatcher thread is running, or
+        # drain() returned with every SQ empty — meaning our command was
+        # popped (possibly by a concurrent caller's drain) and its completion
+        # is forthcoming
+        comp = self.wait(cmd_id)
+        if comp.error is not None:
+            raise comp.error
+        return comp
+
+    def nvm_cmd_bpf_run(self, program: Program, zone_id: int, *,
+                        block_off: int = 0, n_blocks: Optional[int] = None,
+                        tier: Optional[str] = None,
+                        tenant: str = "default") -> ArrayOffloadStats:
+        """Synchronous verified offload over the whole array (the degenerate
+        single-command path through the queue machinery)."""
+        return self._run_sync(program, zone_id, block_off=block_off,
+                              n_blocks=n_blocks, tier=tier, tenant=tenant).stats
+
+    def nvm_cmd_bpf_result(self) -> object:
+        if self._result is None or self._result.error is not None:
+            raise RuntimeError("no offload result available")
+        return self._result.value
+
+    def run_and_fetch(self, program: Program, zone_id: int, **kw):
+        comp = self._run_sync(program, zone_id, **kw)
+        return comp.value, comp.stats
+
+    # ---------------------------------------------------------- execution
+    def _compiled(self, cache: dict, key: tuple, builder):
+        """Compile-once under a lock: device worker threads racing on the
+        same (program, shape) must not each pay the XLA compile, nor
+        double-count it into jit_seconds."""
+        with self._compile_lock:
+            jp = cache.get(key)
+            if jp is not None:
+                return jp, 0.0
+            jp = builder()
+            cache[key] = jp
+            return jp, jp.compile_seconds
+
+    def _execute(self, cmd: OffloadCommand) -> tuple[object, ArrayOffloadStats]:
+        program, zone_id, tier = cmd.program, cmd.zone_id, cmd.tier
+        array = self.array
+        dtype = np.dtype(program.input_dtype)
+        chunks = array.chunks(zone_id, cmd.block_off, cmd.n_blocks)
+        by_dev: dict[int, list[StripeChunk]] = {}
+        for c in chunks:
+            by_dev.setdefault(c.device, []).append(c)
+
+        t0 = time.perf_counter()
+        futures = {
+            self._pool.submit(self._run_device_chunks, d, zone_id,
+                              dev_chunks, program, tier): d
+            for d, dev_chunks in by_dev.items()
+        }
+        per_chunk: dict[int, object] = {}
+        jit_seconds = 0.0
+        insns_executed = 0
+        batched_chunks = 0
+        errors: list[BaseException] = []
+        for fut in concurrent.futures.as_completed(futures):
+            try:
+                vals, compile_s, insns, n_batched = fut.result()
+            except ArrayOffloadError as e:
+                errors.append(e)
+                continue
+            per_chunk.update(vals)
+            jit_seconds += compile_s
+            insns_executed += insns
+            batched_chunks += n_batched
+        if errors:
+            raise errors[0]
+
+        ordered = [per_chunk[c.index] for c in chunks]
+        value = self._combine(program, ordered)
+        # keep exec and JIT time disjoint, as NvmCsd reports them (compiles
+        # happen inside the fan-out wall time on cache misses)
+        exec_seconds = max(time.perf_counter() - t0 - jit_seconds, 0.0)
+
+        if isinstance(value, tuple):
+            bytes_returned = np.asarray(value[0]).nbytes + 8
+        else:
+            bytes_returned = np.asarray(value).nbytes
+        stats = ArrayOffloadStats(
+            program=program.name, tier=tier, zone_id=zone_id,
+            pages=cmd.n_blocks // self.pages_per_read,
+            insns_verified=cmd.insns_verified,
+            insns_executed=insns_executed,
+            bytes_read=cmd.n_blocks * array.block_bytes,
+            bytes_returned=bytes_returned,
+            jit_seconds=jit_seconds, exec_seconds=exec_seconds,
+            n_devices=len(by_dev), n_chunks=len(chunks),
+            batched_chunks=batched_chunks,
+        )
+        return value, stats
+
+    def _run_device_chunks(
+        self, dev_idx: int, zone_id: int, dev_chunks: list[StripeChunk],
+        program: Program, tier: str,
+    ) -> tuple[dict[int, object], float, int, int]:
+        """Execute one device's chunks; returns ({chunk index: value},
+        compile seconds, insns executed, chunks batched)."""
+        device = self.array.devices[dev_idx]
+        stripe = self.array.stripe_blocks
+        full = [c for c in dev_chunks if c.n_blocks == stripe]
+        rest = [c for c in dev_chunks if c.n_blocks != stripe]
+        vals: dict[int, object] = {}
+        compile_s = 0.0
+        insns = 0
+        batched = 0
+        try:
+            if tier == CsdTier.JIT and len(full) > 1:
+                vals_b, compile_s = self._run_batched(
+                    device, zone_id, full, program)
+                vals.update(vals_b)
+                insns += program.n_insns * len(full) * (stripe // self.pages_per_read)
+                batched += len(full)
+            else:
+                rest = full + rest
+            for c in rest:
+                if tier == CsdTier.JIT:
+                    # pre-warm the shared cache race-free so execute_extent
+                    # hits it (its own get/set is not compile-once safe)
+                    page_elems, n_pages = extent_geometry(
+                        self.array.block_bytes, np.dtype(program.input_dtype),
+                        c.n_blocks, self.pages_per_read)
+                    _, cs = self._compiled(
+                        self._jit_cache, (program, n_pages, page_elems),
+                        lambda: jit_program(program, n_pages, page_elems))
+                    compile_s += cs
+                result = execute_extent(
+                    device, program, zone_id, c.local_off, c.n_blocks,
+                    tier=tier, pages_per_read=self.pages_per_read,
+                    jit_cache=self._jit_cache,
+                )
+                vals[c.index] = result.value
+                compile_s += result.compile_seconds
+                insns += result.insns_executed
+        except ZNSError as e:
+            raise ArrayOffloadError(
+                f"offload degraded: member device {dev_idx} failed on zone "
+                f"{zone_id}: {e}"
+            ) from e
+        return vals, compile_s, insns, batched
+
+    def _run_batched(
+        self, device, zone_id: int, full: list[StripeChunk], program: Program,
+    ) -> tuple[dict[int, object], float]:
+        """Execute all full-size chunks of one device in a single vmapped XLA
+        call. Full chunks of a device are contiguous in member-local space, so
+        one read covers them all."""
+        stripe = self.array.stripe_blocks
+        dtype = np.dtype(program.input_dtype)
+        page_elems, chunk_pages = extent_geometry(
+            self.array.block_bytes, dtype, stripe, self.pages_per_read)
+        m = len(full)
+        # bucket the batch to a power of two and zero-pad, so compiles are
+        # O(#programs x log(max chunks/device)) instead of one per distinct
+        # per-device chunk count; pad-row outputs are discarded below
+        m_b = 1 << (m - 1).bit_length()
+        jp, compile_s = self._compiled(
+            self._batched_cache, (program, m_b, chunk_pages, page_elems),
+            lambda: jit_program_batched(program, m_b, chunk_pages, page_elems))
+        raw = device.read_blocks(zone_id, full[0].local_off, m * stripe)
+        pages = np.frombuffer(raw.tobytes(), dtype=dtype).reshape(
+            m, chunk_pages, page_elems)
+        if m_b != m:
+            pages = np.concatenate(
+                [pages, np.zeros((m_b - m, chunk_pages, page_elems), dtype)])
+        out = jp(pages)
+        vals: dict[int, object] = {}
+        if isinstance(out, tuple):
+            bufs, ns = (np.asarray(v) for v in out)
+            for i, c in enumerate(full):
+                vals[c.index] = (bufs[i], ns[i])
+        else:
+            out = np.asarray(out)
+            for i, c in enumerate(full):
+                vals[c.index] = out[i]
+        return vals, compile_s
+
+    # ----------------------------------------------------------- combiner
+    def _combine(self, program: Program, ordered: list[object]) -> object:
+        """Re-reduce per-chunk results in logical stripe order — the
+        scatter-gather step. Semantics match :func:`repro.core.vm.run_oracle`
+        over the concatenated logical stream."""
+        term = program.terminal.op
+        dtype = np.dtype(program.input_dtype)
+        if term == OpCode.RED_COUNT:
+            return np.int64(sum(int(v) for v in ordered))
+        if term == OpCode.RED_SUM:
+            widen = _SUM_WIDEN[dtype]
+            acc = widen(0)
+            for v in ordered:
+                acc = widen(acc + widen(np.asarray(v)[()]))
+            return acc
+        if term == OpCode.RED_MIN:
+            return dtype.type(np.minimum.reduce(
+                [np.asarray(v, dtype)[()] for v in ordered]))
+        if term == OpCode.RED_MAX:
+            return dtype.type(np.maximum.reduce(
+                [np.asarray(v, dtype)[()] for v in ordered]))
+        if term == OpCode.RED_HIST:
+            acc = np.zeros(program.terminal.imm[2], np.int64)
+            for v in ordered:
+                acc += np.asarray(v, np.int64)
+            return acc
+        if term in (OpCode.SELECT, OpCode.SELECT_REC):
+            cap = program.select_capacity
+            parts: list[np.ndarray] = []
+            filled = 0
+            total = 0
+            for v in ordered:
+                buf, n = np.asarray(v[0]), int(v[1])
+                total += n
+                if filled < cap and n > 0:
+                    take = min(n, cap, cap - filled)
+                    parts.append(buf[:take])
+                    filled += take
+            if term == OpCode.SELECT_REC:
+                stride = program.insns[0].imm[0]
+                out = np.zeros((cap, stride), dtype)
+            else:
+                out = np.zeros((cap,), dtype)
+            if parts:
+                cat = np.concatenate(parts, axis=0)
+                out[: cat.shape[0]] = cat
+            return out, np.int64(total)
+        raise AssertionError(term)

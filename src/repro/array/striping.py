@@ -1,0 +1,359 @@
+"""RAID-0-style zone striping over multiple ZNS devices.
+
+The paper defers multi-device operation as future work; real CSD deployments
+aggregate many devices behind one logical address space. A
+:class:`StripedZoneArray` presents N identical :class:`~repro.zns.ZonedDevice`
+members as ONE logical zoned device:
+
+  * logical zone ``z`` is the union of member zone ``z`` on every device;
+    its capacity is ``N x member_zone_blocks``;
+  * the logical block stream is striped round-robin in *chunks* of
+    ``stripe_blocks`` blocks: logical chunk ``k`` lives on device ``k % N``
+    at member-local chunk ``k // N``;
+  * appends and reads preserve ZNS semantics end-to-end — the logical write
+    pointer is the sum of the member write pointers, member appends land
+    exactly at each member's write pointer (a contiguous logical range maps
+    to one contiguous member-local range per device), and the logical zone
+    state machine is derived from the members'.
+
+The class is a drop-in for ``ZonedDevice`` everywhere the repo consumes one
+(``NvmCsd``, ``ZoneDataStore``, ``ZonedCheckpointStore``): a 1-member array
+is the degenerate single-device path.
+"""
+from __future__ import annotations
+
+import concurrent.futures
+import threading
+from typing import Callable, Optional, Sequence
+
+import numpy as np
+
+from repro.zns.device import (
+    OutOfBoundsError,
+    ZonedDevice,
+    ZoneFullError,
+    ZoneState,
+    ZoneStateError,
+)
+
+__all__ = ["StripedZoneArray", "LogicalZone", "StripeChunk"]
+
+
+class StripeChunk:
+    """One stripe chunk of a logical zone extent, in logical order.
+
+    ``index`` is the global chunk index (logical order key), ``device`` the
+    member device index, ``local_off``/``n_blocks`` the member-local extent.
+    """
+
+    __slots__ = ("index", "device", "local_off", "n_blocks", "logical_off")
+
+    def __init__(self, index: int, device: int, local_off: int,
+                 n_blocks: int, logical_off: int):
+        self.index = index
+        self.device = device
+        self.local_off = local_off
+        self.n_blocks = n_blocks
+        self.logical_off = logical_off
+
+    def __repr__(self) -> str:
+        return (f"StripeChunk(#{self.index} dev{self.device} "
+                f"local[{self.local_off},+{self.n_blocks}))")
+
+
+class LogicalZone:
+    """View of one logical (striped) zone.
+
+    Duck-types the fields of :class:`repro.zns.device.Zone` that callers use:
+    ``zone_id``, ``write_pointer`` (settable — distributes to members, needed
+    by checkpoint recovery), ``state`` (derived; settable — broadcast),
+    ``capacity_blocks``, ``remaining_blocks``, ``is_writable``,
+    ``reset_count``.
+    """
+
+    def __init__(self, array: "StripedZoneArray", zone_id: int):
+        self._array = array
+        self.zone_id = zone_id
+
+    def _members(self):
+        return [d.zone(self.zone_id) for d in self._array.devices]
+
+    @property
+    def capacity_blocks(self) -> int:
+        return self._array.zone_blocks
+
+    @property
+    def write_pointer(self) -> int:
+        return sum(z.write_pointer for z in self._members())
+
+    @write_pointer.setter
+    def write_pointer(self, w: int) -> None:
+        # Distribute a logical write pointer across members: member d owns
+        # the logical blocks whose stripe chunk index is congruent to d.
+        arr = self._array
+        s, n = arr.stripe_blocks, arr.n_devices
+        full_rows, rem = divmod(int(w), s * n)
+        rem_chunks, partial = divmod(rem, s)
+        for d, z in enumerate(self._members()):
+            wp = full_rows * s
+            if d < rem_chunks:
+                wp += s
+            elif d == rem_chunks:
+                wp += partial
+            z.write_pointer = wp
+
+    @property
+    def state(self) -> ZoneState:
+        states = {z.state for z in self._members()}
+        if ZoneState.OFFLINE in states:
+            return ZoneState.OFFLINE
+        if ZoneState.READ_ONLY in states:
+            return ZoneState.READ_ONLY
+        if states == {ZoneState.EMPTY}:
+            return ZoneState.EMPTY
+        if states == {ZoneState.FULL}:
+            return ZoneState.FULL
+        return ZoneState.OPEN
+
+    @state.setter
+    def state(self, st: ZoneState) -> None:
+        for z in self._members():
+            z.state = st
+
+    @property
+    def reset_count(self) -> int:
+        return max(z.reset_count for z in self._members())
+
+    @property
+    def remaining_blocks(self) -> int:
+        return self.capacity_blocks - self.write_pointer
+
+    @property
+    def is_writable(self) -> bool:
+        return self.state in (ZoneState.EMPTY, ZoneState.OPEN)
+
+    def __repr__(self) -> str:
+        return (f"LogicalZone(id={self.zone_id}, wp={self.write_pointer}/"
+                f"{self.capacity_blocks}, state={self.state.value})")
+
+
+class StripedZoneArray:
+    """N identical ZNS devices presented as one logical zoned device."""
+
+    def __init__(self, devices: Sequence[ZonedDevice], *, stripe_blocks: int = 16):
+        if not devices:
+            raise ValueError("StripedZoneArray needs at least one device")
+        d0 = devices[0]
+        for i, d in enumerate(devices):
+            if (d.num_zones, d.zone_blocks, d.block_bytes) != (
+                    d0.num_zones, d0.zone_blocks, d0.block_bytes):
+                raise ValueError(
+                    f"member {i} geometry {(d.num_zones, d.zone_blocks, d.block_bytes)} "
+                    f"differs from member 0 {(d0.num_zones, d0.zone_blocks, d0.block_bytes)}"
+                )
+        if stripe_blocks <= 0:
+            raise ValueError("stripe_blocks must be positive")
+        if d0.zone_blocks % stripe_blocks != 0:
+            raise ValueError(
+                f"stripe_blocks {stripe_blocks} must divide member zone size "
+                f"{d0.zone_blocks} (chunks may not straddle member zones)"
+            )
+        self.devices = list(devices)
+        self.n_devices = len(self.devices)
+        self.stripe_blocks = int(stripe_blocks)
+        self.num_zones = d0.num_zones
+        self.block_bytes = d0.block_bytes
+        # logical geometry: every member contributes its whole zone
+        self.zone_blocks = d0.zone_blocks * self.n_devices
+        self.zone_bytes = self.zone_blocks * self.block_bytes
+        self._lock = threading.RLock()
+        # member transfers fan out in parallel — the whole point of striping
+        # is aggregate bandwidth; a 1-wide array skips the thread hop
+        self._io = concurrent.futures.ThreadPoolExecutor(
+            max_workers=self.n_devices) if self.n_devices > 1 else None
+        self.zones = [LogicalZone(self, z) for z in range(self.num_zones)]
+
+    def _fanout(self, tasks: list[Callable[[], object]]) -> list[object]:
+        """Run member-device transfers concurrently (sequentially when the
+        array is 1-wide or there is a single task)."""
+        if self._io is None or len(tasks) <= 1:
+            return [t() for t in tasks]
+        return [f.result() for f in [self._io.submit(t) for t in tasks]]
+
+    # -------------------------------------------------------- address math
+    def block_location(self, block: int) -> tuple[int, int]:
+        """Logical block -> (device index, member-local block)."""
+        s, n = self.stripe_blocks, self.n_devices
+        chunk, within = divmod(block, s)
+        return chunk % n, (chunk // n) * s + within
+
+    def chunks(self, zone_id: int, block_off: int, n_blocks: int) -> list[StripeChunk]:
+        """Decompose a logical extent into stripe chunks, in logical order.
+
+        Each chunk is contiguous both logically and on its member device —
+        the unit the offload scheduler fans out.
+        """
+        self.zone(zone_id)  # bounds-check the zone id
+        s = self.stripe_blocks
+        out: list[StripeChunk] = []
+        b, end = block_off, block_off + n_blocks
+        while b < end:
+            chunk = b // s
+            take = min(end - b, (chunk + 1) * s - b)
+            dev, local = self.block_location(b)
+            out.append(StripeChunk(chunk, dev, local, take, b))
+            b += take
+        return out
+
+    # ------------------------------------------------------------- zones
+    def zone(self, zone_id: int) -> LogicalZone:
+        if not 0 <= zone_id < self.num_zones:
+            raise OutOfBoundsError(f"zone {zone_id} out of range [0,{self.num_zones})")
+        return self.zones[zone_id]
+
+    def report_zones(self) -> list[LogicalZone]:
+        return list(self.zones)
+
+    def open_zones(self) -> list[LogicalZone]:
+        return [z for z in self.zones if z.state == ZoneState.OPEN]
+
+    # ------------------------------------------------------------- append
+    def zone_append(self, zone_id: int, data: np.ndarray | bytes) -> int:
+        """Striped Zone Append: split ``data`` into stripe chunks and append
+        each member's share at that member's write pointer. Returns the
+        logical start block."""
+        raw = np.frombuffer(data, dtype=np.uint8) if isinstance(data, (bytes, bytearray)) \
+            else np.ascontiguousarray(data).view(np.uint8).reshape(-1)
+        nblocks = -(-raw.size // self.block_bytes)  # ceil
+        with self._lock:
+            z = self.zone(zone_id)
+            if not z.is_writable:
+                raise ZoneStateError(
+                    f"logical zone {zone_id} not writable (state={z.state})")
+            start = z.write_pointer
+            if nblocks > z.remaining_blocks:
+                raise ZoneFullError(
+                    f"append of {nblocks} blocks exceeds logical zone {zone_id} "
+                    f"remaining {z.remaining_blocks}"
+                )
+            padded = np.zeros(nblocks * self.block_bytes, np.uint8)
+            padded[: raw.size] = raw
+            blocks = padded.reshape(nblocks, self.block_bytes)
+            owner = ((np.arange(start, start + nblocks) // self.stripe_blocks)
+                     % self.n_devices)
+
+            def append_share(d: int, dev: ZonedDevice) -> None:
+                share = blocks[owner == d]
+                if share.size == 0:
+                    return
+                # member-local target is contiguous and starts at the member
+                # write pointer (appends only ever go through the array)
+                landed = dev.zone_append(zone_id, share)
+                expect = self.block_location(
+                    int(np.flatnonzero(owner == d)[0]) + start)[1]
+                if landed != expect:
+                    raise ZoneStateError(
+                        f"stripe desync on device {d} zone {zone_id}: member "
+                        f"append landed at {landed}, expected {expect}"
+                    )
+
+            self._fanout([
+                (lambda d=d, dev=dev: append_share(d, dev))
+                for d, dev in enumerate(self.devices)
+            ])
+            return start
+
+    # --------------------------------------------------------------- read
+    def read_blocks(self, zone_id: int, block_off: int, nblocks: int) -> np.ndarray:
+        """Striped read: one contiguous member read per device, interleaved
+        back into logical order."""
+        with self._lock:
+            z = self.zone(zone_id)
+            if z.state == ZoneState.OFFLINE:
+                raise ZoneStateError(f"logical zone {zone_id} is offline")
+            if block_off < 0 or nblocks < 0 or block_off + nblocks > z.write_pointer:
+                raise OutOfBoundsError(
+                    f"read [{block_off},{block_off + nblocks}) beyond write pointer "
+                    f"{z.write_pointer} of logical zone {zone_id}"
+                )
+            out = np.empty((nblocks, self.block_bytes), np.uint8)
+            if nblocks == 0:
+                return out.reshape(-1)
+            bidx = np.arange(block_off, block_off + nblocks)
+            chunk = bidx // self.stripe_blocks
+            owner = chunk % self.n_devices
+            local = (chunk // self.n_devices) * self.stripe_blocks \
+                + bidx % self.stripe_blocks
+            def read_share(d: int, dev: ZonedDevice) -> None:
+                sel = owner == d
+                if not sel.any():
+                    return
+                lsel = local[sel]
+                raw = dev.read_blocks(zone_id, int(lsel[0]), int(lsel.size))
+                out[sel] = raw.reshape(-1, self.block_bytes)
+
+            self._fanout([
+                (lambda d=d, dev=dev: read_share(d, dev))
+                for d, dev in enumerate(self.devices)
+            ])
+            return out.reshape(-1)
+
+    def read_zone(self, zone_id: int) -> np.ndarray:
+        return self.read_blocks(zone_id, 0, self.zone(zone_id).write_pointer)
+
+    # ---------------------------------------------------- zone management
+    def finish_zone(self, zone_id: int) -> None:
+        for dev in self.devices:
+            dev.finish_zone(zone_id)
+
+    def set_read_only(self, zone_id: int) -> None:
+        for dev in self.devices:
+            dev.set_read_only(zone_id)
+
+    def reset_zone(self, zone_id: int) -> None:
+        with self._lock:
+            if self.zone(zone_id).state == ZoneState.OFFLINE:
+                raise ZoneStateError(f"logical zone {zone_id} is offline")
+            for dev in self.devices:
+                dev.reset_zone(zone_id)
+
+    def set_offline(self, zone_id: int, *, device: Optional[int] = None) -> None:
+        """Fault injection: kill the zone on one member (``device``) or all."""
+        targets = self.devices if device is None else [self.devices[device]]
+        for dev in targets:
+            dev.set_offline(zone_id)
+
+    # --------------------------------------------------------------- misc
+    def flush(self) -> None:
+        for dev in self.devices:
+            dev.flush()
+
+    def close(self) -> None:
+        """Release the member-I/O worker threads (the array stays readable
+        via a fresh instance; member devices are not touched)."""
+        if self._io is not None:
+            self._io.shutdown(wait=True)
+            self._io = None
+
+    def __enter__(self) -> "StripedZoneArray":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    @property
+    def lba_size(self) -> int:
+        return self.block_bytes
+
+    @property
+    def stats(self) -> dict:
+        """Aggregate member device statistics (NVMe log-page analogue)."""
+        agg: dict[str, int] = {}
+        for dev in self.devices:
+            for k, v in dev.stats.items():
+                agg[k] = agg.get(k, 0) + v
+        return agg
+
+    def utilization(self) -> float:
+        written = sum(z.write_pointer for z in self.zones)
+        return written / float(self.num_zones * self.zone_blocks)

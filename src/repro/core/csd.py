@@ -38,9 +38,106 @@ from repro.core.vm import (
 )
 from repro.zns.device import ZonedDevice
 
-__all__ = ["NvmCsd", "OffloadStats", "CsdTier"]
+__all__ = ["NvmCsd", "OffloadStats", "CsdTier", "extent_geometry",
+           "execute_extent", "resolve_tier"]
 
 TIERS = ("interp", "jit", "kernel")
+
+
+def resolve_tier(tier: str, program: Program) -> str:
+    """The tier that will actually execute ``program``: kernel-tier requests
+    for non-kernelizable programs fall back to the XLA JIT tier, and the
+    stats/history must say so rather than mis-attributing JIT timings."""
+    if tier == CsdTier.KERNEL:
+        from repro.kernels.zone_filter import ops as zf_ops
+        if not zf_ops.kernelizable(program):
+            return CsdTier.JIT
+    return tier
+
+
+def extent_geometry(
+    block_bytes: int, dtype: np.dtype, n_blocks: int, pages_per_read: int
+) -> tuple[int, int]:
+    """Page geometry of a zone extent: (elements per page, number of pages).
+
+    Raises ValueError when the extent does not tile into whole pages — the
+    alignment contract every execution tier relies on.
+    """
+    page_elems = block_bytes * pages_per_read // dtype.itemsize
+    if block_bytes * pages_per_read % dtype.itemsize:
+        raise ValueError("block size not a multiple of element size")
+    if n_blocks % pages_per_read:
+        raise ValueError(
+            f"extent of {n_blocks} blocks not a multiple of read granularity "
+            f"{pages_per_read}"
+        )
+    return page_elems, n_blocks // pages_per_read
+
+
+def execute_extent(
+    device: ZonedDevice,
+    program: Program,
+    zone_id: int,
+    block_off: int,
+    n_blocks: int,
+    *,
+    tier: str,
+    pages_per_read: int = 1,
+    jit_cache: Optional[dict] = None,
+) -> OffloadResult:
+    """Execute an (already verified) program over one zone extent on one
+    device, on the requested tier. The single-device execution engine shared
+    by :class:`NvmCsd` and the array scheduler (which calls it per stripe
+    chunk when the batched path does not apply).
+
+    ``result.compile_seconds`` is non-zero only when this call compiled a
+    fresh JIT executable (cache miss in ``jit_cache``).
+    """
+    tier = resolve_tier(tier, program)   # kernel -> jit for non-kernelizable
+    dtype = np.dtype(program.input_dtype)
+    page_elems, n_pages = extent_geometry(
+        device.block_bytes, dtype, n_blocks, pages_per_read)
+    insns_bound = program.n_insns * n_pages
+    if jit_cache is None:
+        jit_cache = {}
+
+    if tier == CsdTier.INTERP:
+        def read_page(p: int) -> np.ndarray:
+            return device.read_blocks(
+                zone_id, block_off + p * pages_per_read, pages_per_read)
+        return interpret_program(program, read_page, n_pages, page_elems)
+    if tier == CsdTier.JIT:
+        key = (program, n_pages, page_elems)
+        jp = jit_cache.get(key)
+        compile_seconds = 0.0
+        if jp is None:
+            jp = jit_program(program, n_pages, page_elems)
+            jit_cache[key] = jp
+            compile_seconds = jp.compile_seconds
+        # steps 2,3: device DMA of the zone extent into device DRAM
+        raw = device.read_blocks(zone_id, block_off, n_blocks)
+        pages = np.frombuffer(raw.tobytes(), dtype=dtype).reshape(n_pages, page_elems)
+        t0 = time.perf_counter()
+        value = jp(pages)
+        value = tuple(np.asarray(v) for v in value) if isinstance(value, tuple) \
+            else np.asarray(value)
+        exec_seconds = time.perf_counter() - t0
+        nbytes = (sum(v.nbytes for v in value) if isinstance(value, tuple)
+                  else value.nbytes)
+        return OffloadResult(value, nbytes, n_pages,
+                             insns_bound, exec_seconds, compile_seconds)
+    if tier == CsdTier.KERNEL:
+        # Pallas tier (TPU target; interpret-mode on CPU); resolve_tier above
+        # already routed non-kernelizable programs to the JIT branch
+        from repro.kernels.zone_filter import ops as zf_ops
+        raw = device.read_blocks(zone_id, block_off, n_blocks)
+        pages = np.frombuffer(raw.tobytes(), dtype=dtype).reshape(n_pages, page_elems)
+        t0 = time.perf_counter()
+        value = np.asarray(zf_ops.run_program_kernel(program, pages))
+        exec_seconds = time.perf_counter() - t0
+        return OffloadResult(value, value.nbytes, n_pages,
+                             insns_bound, exec_seconds)
+    raise ValueError(f"unknown tier {tier!r}")
 
 
 @dataclass
@@ -132,22 +229,15 @@ class NvmCsd:
         """Verify + execute ``program`` against a zone extent. Synchronous:
         returns once the (reduced) result is available via
         :meth:`nvm_cmd_bpf_result`."""
-        tier = tier or self.default_tier
+        tier = resolve_tier(tier or self.default_tier, program)
         zone = self.device.zone(zone_id)
         if n_blocks is None:
             n_blocks = zone.write_pointer - block_off
 
         dtype = np.dtype(program.input_dtype)
         block_bytes = self.device.block_bytes
-        page_elems = block_bytes * self.pages_per_read // dtype.itemsize
-        if block_bytes * self.pages_per_read % dtype.itemsize:
-            raise ValueError("block size not a multiple of element size")
-        if n_blocks % self.pages_per_read:
-            raise ValueError(
-                f"extent of {n_blocks} blocks not a multiple of read granularity "
-                f"{self.pages_per_read}"
-            )
-        n_pages = n_blocks // self.pages_per_read
+        page_elems, n_pages = extent_geometry(
+            block_bytes, dtype, n_blocks, self.pages_per_read)
 
         # steps 4: verify (static program + the zone extent it may touch)
         t0 = time.perf_counter()
@@ -166,51 +256,12 @@ class NvmCsd:
             bytes_read=n_blocks * block_bytes,
         )
 
-        if tier == CsdTier.INTERP:
-            def read_page(p: int) -> np.ndarray:
-                return self.bpf_read(
-                    zone_id, block_off + p * self.pages_per_read, self.pages_per_read
-                )
-            result = interpret_program(program, read_page, n_pages, page_elems)
-        elif tier == CsdTier.JIT:
-            key = (program, n_pages, page_elems)
-            jp = self._jit_cache.get(key)
-            if jp is None:
-                jp = jit_program(program, n_pages, page_elems)
-                self._jit_cache[key] = jp
-                stats.jit_seconds = jp.compile_seconds
-            # steps 2,3: device DMA of the zone extent into device DRAM
-            raw = self.device.read_blocks(zone_id, block_off, n_blocks)
-            pages = np.frombuffer(raw.tobytes(), dtype=dtype).reshape(n_pages, page_elems)
-            t0 = time.perf_counter()
-            value = jp(pages)
-            value = tuple(np.asarray(v) for v in value) if isinstance(value, tuple) \
-                else np.asarray(value)
-            exec_seconds = time.perf_counter() - t0
-            nbytes = (sum(v.nbytes for v in value) if isinstance(value, tuple)
-                      else value.nbytes)
-            result = OffloadResult(value, nbytes, n_pages,
-                                   insns_verified, exec_seconds, stats.jit_seconds)
-        elif tier == CsdTier.KERNEL:
-            # Pallas tier (TPU target; interpret-mode on CPU). Only the
-            # reduce-style terminals are kernelized; verifier-admitted
-            # programs with other terminals fall back to the JIT tier.
-            from repro.kernels.zone_filter import ops as zf_ops
-            if not zf_ops.kernelizable(program):
-                return self.nvm_cmd_bpf_run(
-                    program, zone_id, block_off=block_off, n_blocks=n_blocks,
-                    tier=CsdTier.JIT,
-                )
-            raw = self.device.read_blocks(zone_id, block_off, n_blocks)
-            pages = np.frombuffer(raw.tobytes(), dtype=dtype).reshape(n_pages, page_elems)
-            t0 = time.perf_counter()
-            value = np.asarray(zf_ops.run_program_kernel(program, pages))
-            exec_seconds = time.perf_counter() - t0
-            result = OffloadResult(value, value.nbytes, n_pages,
-                                   insns_verified, exec_seconds)
-        else:
-            raise ValueError(f"unknown tier {tier!r}")
-
+        result = execute_extent(
+            self.device, program, zone_id, block_off, n_blocks,
+            tier=tier, pages_per_read=self.pages_per_read,
+            jit_cache=self._jit_cache,
+        )
+        stats.jit_seconds = result.compile_seconds
         stats.insns_executed = result.insns_executed
         stats.exec_seconds = result.exec_seconds
         stats.bytes_returned = result.bytes_returned

@@ -29,6 +29,7 @@ from typing import Callable, Optional
 import numpy as np
 
 import jax
+import jax.experimental
 import jax.numpy as jnp
 
 from repro.core.programs import (
@@ -43,6 +44,7 @@ __all__ = [
     "run_oracle",
     "interpret_program",
     "jit_program",
+    "jit_program_batched",
     "JittedProgram",
 ]
 
@@ -325,16 +327,10 @@ def _stream_mask_jnp(program: Program, x: jnp.ndarray):
     return x, mask
 
 
-def jit_program(
-    program: Program,
-    n_pages: int,
-    page_elems: int,
-    *,
-    donate: bool = False,
-) -> JittedProgram:
-    """Compile ``program`` to XLA. The compiled function scans the zone one
-    page at a time (bounded working set — the VMEM/CSD-DRAM constraint) and
-    carries only the reduction accumulator."""
+def _build_program_runner(program: Program):
+    """Build the page-scanning ``run(pages)`` closure shared by the single
+    (:func:`jit_program`) and chunk-batched (:func:`jit_program_batched`)
+    compile paths."""
     dtype = np.dtype(program.input_dtype)
     term = program.terminal
     cap = program.select_capacity
@@ -401,12 +397,50 @@ def jit_program(
             return buf[:cap], n
         return carry
 
+    return run
+
+
+def jit_program(
+    program: Program,
+    n_pages: int,
+    page_elems: int,
+    *,
+    donate: bool = False,
+) -> JittedProgram:
+    """Compile ``program`` to XLA. The compiled function scans the zone one
+    page at a time (bounded working set — the VMEM/CSD-DRAM constraint) and
+    carries only the reduction accumulator."""
+    dtype = np.dtype(program.input_dtype)
+    run = _build_program_runner(program)
     spec = jax.ShapeDtypeStruct((n_pages, page_elems), dtype)
     t0 = time.perf_counter()
     # int64 accumulators need 64-bit mode at *trace* time; scope it to the
     # offload compiler so the model stack keeps JAX's 32-bit defaults.
-    with jax.enable_x64(True):
+    with jax.experimental.enable_x64():
         jitted = jax.jit(run, donate_argnums=(0,) if donate else ())
         compiled = jitted.lower(spec).compile()
+    compile_seconds = time.perf_counter() - t0
+    return JittedProgram(compiled, compile_seconds, n_pages, page_elems, program)
+
+
+def jit_program_batched(
+    program: Program,
+    n_chunks: int,
+    n_pages: int,
+    page_elems: int,
+) -> JittedProgram:
+    """Compile ``program`` vmapped over a leading *chunk* axis.
+
+    The array scheduler uses this to execute every same-shape shard of a
+    striped offload in ONE XLA call: input ``[n_chunks, n_pages, page_elems]``,
+    output a per-chunk result batch (e.g. ``[n_chunks]`` partial sums, or
+    ``([n_chunks, cap], [n_chunks])`` for SELECT) that the combiner then
+    re-reduces in logical stripe order."""
+    dtype = np.dtype(program.input_dtype)
+    run = _build_program_runner(program)
+    spec = jax.ShapeDtypeStruct((n_chunks, n_pages, page_elems), dtype)
+    t0 = time.perf_counter()
+    with jax.experimental.enable_x64():
+        compiled = jax.jit(jax.vmap(run)).lower(spec).compile()
     compile_seconds = time.perf_counter() - t0
     return JittedProgram(compiled, compile_seconds, n_pages, page_elems, program)

@@ -25,6 +25,7 @@ from typing import Iterator, Optional
 
 import numpy as np
 
+from repro.array import OffloadScheduler, StripedZoneArray
 from repro.core import CsdTier, NvmCsd, OffloadStats
 from repro.core.programs import Instruction, OpCode, Program
 from repro.zns import ZonedDevice
@@ -41,7 +42,7 @@ class ZoneDataStore:
     (then the pipeline reads multiple pages per offload access).
     """
 
-    def __init__(self, device: ZonedDevice, seq_len: int):
+    def __init__(self, device: ZonedDevice | StripedZoneArray, seq_len: int):
         self.device = device
         self.seq_len = seq_len
         per_page = device.block_bytes // 4
@@ -104,8 +105,15 @@ class ZoneDataPipeline:
                  min_quality: int = 0, tier: str = CsdTier.JIT,
                  select_capacity: Optional[int] = None):
         self.store = store
-        self.csd = NvmCsd(store.device, default_tier=tier,
-                          pages_per_read=store.pages_per_record_unit)
+        if isinstance(store.device, StripedZoneArray):
+            # striped pushdown: the quality filter fans out across every
+            # member device; only surviving records cross to the host
+            self.csd = OffloadScheduler(
+                store.device, default_tier=tier,
+                pages_per_read=store.pages_per_record_unit)
+        else:
+            self.csd = NvmCsd(store.device, default_tier=tier,
+                              pages_per_read=store.pages_per_record_unit)
         self.batch = batch
         self.min_quality = min_quality
         self.stats = PipelineStats()

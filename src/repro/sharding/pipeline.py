@@ -73,7 +73,13 @@ def pipeline_apply(
         return outs
 
     spec_params = jax.tree.map(lambda _: P(axis_name), stage_params)
-    return jax.jit(jax.shard_map(
-        run, mesh=mesh, in_specs=(spec_params, P()), out_specs=P(),
-        check_vma=False,
-    ))(stage_params, xs)
+    if hasattr(jax, "shard_map"):                      # jax >= 0.6
+        smap = jax.shard_map(
+            run, mesh=mesh, in_specs=(spec_params, P()), out_specs=P(),
+            check_vma=False)
+    else:                                              # jax 0.4.x
+        from jax.experimental.shard_map import shard_map
+        smap = shard_map(
+            run, mesh=mesh, in_specs=(spec_params, P()), out_specs=P(),
+            check_rep=False)
+    return jax.jit(smap)(stage_params, xs)

@@ -27,6 +27,7 @@ from typing import Any, Optional
 import jax
 import numpy as np
 
+from repro.array import StripedZoneArray
 from repro.zns import ZonedDevice, ZoneState
 
 __all__ = ["ZonedCheckpointStore", "CheckpointError"]
@@ -61,7 +62,7 @@ class ZonedCheckpointStore:
     """
 
     def __init__(self, path: Optional[Path | str] = None, *,
-                 device: Optional[ZonedDevice] = None,
+                 device: Optional[ZonedDevice | StripedZoneArray] = None,
                  num_zones: int = 16,
                  zone_bytes: int = 256 * 1024 * 1024,
                  keep: int = 2):
@@ -72,6 +73,49 @@ class ZonedCheckpointStore:
         self.device = device
         self.keep = keep
         self._recover()
+
+    @classmethod
+    def striped(cls, directory: Path | str, *, num_devices: int = 4,
+                num_zones: int = 16,
+                member_zone_bytes: int = 64 * 1024 * 1024,
+                stripe_blocks: int = 256, keep: int = 2,
+                ) -> "ZonedCheckpointStore":
+        """Checkpoint store over a striped array of file-backed ZNS devices.
+
+        Leaf payloads stripe across ``num_devices`` member files
+        (``directory/member{i}.zns``) in ``stripe_blocks``-block chunks —
+        save/restore bandwidth aggregates over every member, and a reopened
+        store recovers the striped manifests exactly like the single-device
+        path (the logical zone's write pointer distributes to the members).
+
+        The array geometry is persisted to ``directory/array.json`` on first
+        use and ADOPTED on reopen — a stale geometry would de-interleave
+        member blocks in the wrong order and render every checkpoint
+        unreadable, so the sidecar, not the arguments, is the truth for an
+        existing store.
+        """
+        directory = Path(directory)
+        directory.mkdir(parents=True, exist_ok=True)
+        sidecar = directory / "array.json"
+        geometry = {
+            "num_devices": num_devices, "num_zones": num_zones,
+            "member_zone_bytes": member_zone_bytes,
+            "stripe_blocks": stripe_blocks,
+        }
+        if sidecar.exists():
+            geometry = json.loads(sidecar.read_text())
+        else:
+            sidecar.write_text(json.dumps(geometry))
+        devices = [
+            ZonedDevice(num_zones=geometry["num_zones"],
+                        zone_bytes=geometry["member_zone_bytes"],
+                        block_bytes=4096,
+                        backing_file=directory / f"member{i}.zns")
+            for i in range(geometry["num_devices"])
+        ]
+        array = StripedZoneArray(devices,
+                                 stripe_blocks=geometry["stripe_blocks"])
+        return cls(device=array, keep=keep)
 
     # --------------------------------------------------------------- write
     def save(self, step: int, tree: Any) -> dict:
@@ -128,14 +172,10 @@ class ZonedCheckpointStore:
 
     # ---------------------------------------------------------------- read
     def _recover(self) -> None:
-        """Scan the manifest zone for valid commit records (crash recovery)."""
+        """Scan the manifest zone for valid commit records (crash recovery).
+        Covers both the live-device case and a file-backed reopen, where the
+        zone metadata is volatile and the log is the truth."""
         self._manifests: list[dict] = []
-        z = self.device.zone(0)
-        if z.write_pointer == 0:
-            # file-backed reopen: scan raw blocks for manifests (the zone
-            # metadata itself is volatile; the log is the truth)
-            self._scan_raw_manifest_zone()
-            return
         self._scan_raw_manifest_zone()
 
     def _scan_raw_manifest_zone(self) -> None:

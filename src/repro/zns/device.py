@@ -22,6 +22,7 @@ from __future__ import annotations
 
 import enum
 import threading
+import time
 from dataclasses import dataclass, field
 from pathlib import Path
 from typing import Optional
@@ -183,6 +184,10 @@ class ZonedDevice:
             pad = nblocks * self.block_bytes - raw.size
             if pad:
                 self._buf[off + raw.size : off + raw.size + pad] = 0
+            if self.append_us_per_block:
+                # bandwidth emulation, QEMU-style: the device is busy (lock
+                # held) for the modeled transfer time
+                time.sleep(nblocks * self.append_us_per_block * 1e-6)
             z.write_pointer += nblocks
             if z.write_pointer == z.capacity_blocks:
                 z.state = ZoneState.FULL
@@ -208,6 +213,10 @@ class ZonedDevice:
                 )
             off = (z.start_lba + block_off) * self.block_bytes
             out = np.array(self._buf[off : off + nblocks * self.block_bytes])
+            if self.read_us_per_block:
+                # bandwidth emulation: one device serves one read at a time,
+                # but independent array members read in parallel
+                time.sleep(nblocks * self.read_us_per_block * 1e-6)
             self.stats["blocks_read"] += nblocks
             return out
 

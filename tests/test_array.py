@@ -1,0 +1,293 @@
+"""CSD array subsystem: stripe round-trips, queue arbitration/backpressure,
+scheduler result-equivalence vs the single-device NvmCsd oracle for every
+OpCode terminal, and fault degradation when a member zone goes OFFLINE."""
+import threading
+
+import numpy as np
+import pytest
+
+from repro.array import (
+    ArrayOffloadError,
+    Completion,
+    OffloadCommand,
+    OffloadScheduler,
+    QueueFullError,
+    QueuePair,
+    CompletionQueue,
+    StripedZoneArray,
+    SubmissionQueue,
+    WeightedRoundRobinArbiter,
+)
+from repro.core import CsdTier, NvmCsd, VerifyError
+from repro.core.programs import (
+    Instruction,
+    OpCode,
+    Program,
+    field_reduce,
+    filter_count,
+    filter_select,
+    filter_sum,
+    histogram,
+    select_records,
+)
+from repro.zns import OutOfBoundsError, ZonedDevice, ZoneFullError
+
+BLOCK = 4096
+STRIPE = 4
+
+
+def make_array(n_devices, *, num_zones=4, zone_kib=256, stripe=STRIPE):
+    devs = [ZonedDevice(num_zones=num_zones, zone_bytes=zone_kib * 1024,
+                        block_bytes=BLOCK) for _ in range(n_devices)]
+    return StripedZoneArray(devs, stripe_blocks=stripe)
+
+
+def int32_blocks(n_blocks, seed=0, lo=-1000, hi=1000):
+    rng = np.random.default_rng(seed)
+    return rng.integers(lo, hi, n_blocks * BLOCK // 4, dtype=np.int32)
+
+
+# ------------------------------------------------------------------ striping
+
+@pytest.mark.parametrize("n_devices", [1, 2, 3, 4])
+def test_stripe_append_read_round_trip(n_devices):
+    arr = make_array(n_devices)
+    data = int32_blocks(4 * STRIPE * n_devices + 7)  # force a partial chunk
+    arr.zone_append(0, data)
+    back = np.frombuffer(arr.read_blocks(0, 0, arr.zone(0).write_pointer)
+                         .tobytes(), np.int32)
+    assert np.array_equal(back, data)
+
+
+def test_stripe_partial_reads_any_offset():
+    arr = make_array(3)
+    data = int32_blocks(23)
+    arr.zone_append(0, data)
+    per_block = BLOCK // 4
+    for off, n in [(0, 1), (1, 5), (3, 17), (7, 16), (22, 1), (0, 23)]:
+        back = np.frombuffer(arr.read_blocks(0, off, n).tobytes(), np.int32)
+        assert np.array_equal(back, data[off * per_block:(off + n) * per_block])
+
+
+def test_stripe_incremental_appends_interleave_correctly():
+    arr = make_array(2)
+    parts = [int32_blocks(n, seed=n) for n in (3, 1, 6, 2)]
+    for p in parts:
+        arr.zone_append(0, p)
+    want = np.concatenate(parts)
+    back = np.frombuffer(arr.read_zone(0).tobytes(), np.int32)
+    assert np.array_equal(back, want)
+    # data really is spread over both members
+    assert all(d.zone(0).write_pointer > 0 for d in arr.devices)
+
+
+def test_stripe_reset_and_reuse():
+    arr = make_array(2)
+    arr.zone_append(1, int32_blocks(8))
+    arr.reset_zone(1)
+    assert arr.zone(1).write_pointer == 0
+    assert all(d.zone(1).write_pointer == 0 for d in arr.devices)
+    fresh = int32_blocks(4, seed=9)
+    arr.zone_append(1, fresh)
+    assert np.array_equal(
+        np.frombuffer(arr.read_zone(1).tobytes(), np.int32), fresh)
+
+
+def test_stripe_bounds_and_capacity_errors():
+    arr = make_array(2, zone_kib=64)  # 16 blocks/member -> 32 logical
+    arr.zone_append(0, int32_blocks(4))
+    with pytest.raises(OutOfBoundsError):
+        arr.read_blocks(0, 0, 5)   # beyond logical write pointer
+    with pytest.raises(ZoneFullError):
+        arr.zone_append(0, int32_blocks(29))  # exceeds logical capacity
+    with pytest.raises(ValueError):
+        StripedZoneArray([ZonedDevice(num_zones=2, zone_bytes=64 * 1024),
+                          ZonedDevice(num_zones=4, zone_bytes=64 * 1024)])
+
+
+def test_logical_write_pointer_setter_distributes():
+    arr = make_array(3, stripe=4)
+    z = arr.zone(0)
+    z.write_pointer = 4 * 3 * 2 + 4 + 2   # 2 full rows + 1 full chunk + 2
+    assert [d.zone(0).write_pointer for d in arr.devices] == [12, 10, 8]
+    assert z.write_pointer == 30
+    z.write_pointer = 0
+    assert all(d.zone(0).write_pointer == 0 for d in arr.devices)
+
+
+# -------------------------------------------------------------------- queues
+
+def test_sq_backpressure_rejects_then_unblocks():
+    sq = SubmissionQueue("t", depth=2)
+    prog = filter_count("int32", "gt", 0)
+    mk = lambda: OffloadCommand(prog, 0, 0, 4, None)
+    sq.submit(mk()); sq.submit(mk())
+    with pytest.raises(QueueFullError):
+        sq.submit(mk())
+    assert sq.rejected == 1
+    # a blocked submitter proceeds once the arbiter pops a slot
+    done = threading.Event()
+    def blocked():
+        sq.submit(mk(), block=True, timeout=5.0)
+        done.set()
+    t = threading.Thread(target=blocked); t.start()
+    assert not done.wait(0.05)
+    assert sq.pop() is not None
+    assert done.wait(5.0)
+    t.join()
+    assert len(sq) == 2
+
+
+def test_wrr_arbiter_respects_weights():
+    prog = filter_count("int32", "gt", 0)
+    pairs = {}
+    arb = WeightedRoundRobinArbiter()
+    for tenant, weight in [("a", 2), ("b", 1)]:
+        pair = QueuePair(SubmissionQueue(tenant, depth=16, weight=weight),
+                         CompletionQueue(tenant))
+        for _ in range(6):
+            pair.sq.submit(OffloadCommand(prog, 0, 0, 4, None, tenant=tenant))
+        pairs[tenant] = pair
+        arb.add(pair)
+    order = []
+    while (nxt := arb.next_command()) is not None:
+        order.append(nxt[0].tenant)
+    # 2:1 service mix while both queues are backlogged; once 'a' drains the
+    # arbiter stays work-conserving and serves the remaining 'b' commands
+    assert order == ["a", "a", "b"] * 3 + ["b", "b", "b"]
+
+
+def test_wrr_arbiter_work_conserving_when_queue_empty():
+    prog = filter_count("int32", "gt", 0)
+    arb = WeightedRoundRobinArbiter()
+    a = QueuePair(SubmissionQueue("a", depth=4, weight=3), CompletionQueue("a"))
+    b = QueuePair(SubmissionQueue("b", depth=4, weight=1), CompletionQueue("b"))
+    arb.add(a); arb.add(b)
+    b.sq.submit(OffloadCommand(prog, 0, 0, 4, None, tenant="b"))
+    nxt = arb.next_command()
+    assert nxt is not None and nxt[0].tenant == "b"
+    assert arb.next_command() is None
+
+
+# ----------------------------------------------------------------- scheduler
+
+def oracle_pair(n_blocks, seed=0):
+    """(single-device NvmCsd, striped 4-wide scheduler) over identical data."""
+    data = int32_blocks(n_blocks, seed=seed)
+    dev = ZonedDevice(num_zones=2, zone_bytes=1024 * 1024, block_bytes=BLOCK)
+    dev.zone_append(0, data)
+    arr = make_array(4)
+    arr.zone_append(0, data)
+    return NvmCsd(dev), OffloadScheduler(arr)
+
+
+TERMINAL_PROGRAMS = [
+    filter_count("int32", "gt", 0),
+    filter_sum("int32", "lt", 100),
+    field_reduce("int32", 8, 1, "min"),
+    field_reduce("int32", 8, 2, "max"),
+    histogram("int32", -1000, 1000, 32),
+    filter_select("int32", "gt", 900, 64),
+    select_records("int32", 8, 0, "gt", 500, 32),
+]
+
+
+@pytest.mark.parametrize("program", TERMINAL_PROGRAMS,
+                         ids=[p.name for p in TERMINAL_PROGRAMS])
+def test_scheduler_matches_single_device_oracle(program):
+    csd, sched = oracle_pair(40)
+    want, _ = csd.run_and_fetch(program, 0)
+    got, stats = sched.run_and_fetch(program, 0)
+    if isinstance(want, tuple):
+        assert np.array_equal(np.asarray(want[0]), np.asarray(got[0]))
+        assert int(want[1]) == int(got[1])
+    else:
+        assert np.asarray(want).dtype == np.asarray(got).dtype
+        assert np.array_equal(np.asarray(want), np.asarray(got))
+    assert stats.n_devices == 4
+    assert stats.n_chunks == 10
+    assert stats.bytes_read == 40 * BLOCK
+
+
+@pytest.mark.parametrize("tier", [CsdTier.INTERP, CsdTier.JIT, CsdTier.KERNEL])
+def test_scheduler_tiers_agree_with_tail_chunk(tier):
+    csd, sched = oracle_pair(37, seed=3)  # 37 blocks -> partial tail chunk
+    program = filter_count("int32", "gt", 0)
+    want, _ = csd.run_and_fetch(program, 0, tier=tier)
+    got, _ = sched.run_and_fetch(program, 0, tier=tier)
+    assert int(want) == int(got)
+
+
+def test_scheduler_batches_full_chunks_on_jit_tier():
+    _, sched = oracle_pair(40)
+    stats = sched.nvm_cmd_bpf_run(filter_count("int32", "gt", 0), 0)
+    # 10 chunks over 4 devices: the 2-chunk devices batch via vmap
+    assert stats.batched_chunks > 0
+    assert stats.tier == CsdTier.JIT
+
+
+def test_scheduler_partial_extent_matches_oracle():
+    csd, sched = oracle_pair(40, seed=7)
+    program = filter_sum("int32", "ge", -50)
+    want, _ = csd.run_and_fetch(program, 0, block_off=4, n_blocks=24)
+    got, _ = sched.run_and_fetch(program, 0, block_off=4, n_blocks=24)
+    assert int(want) == int(got)
+
+
+def test_scheduler_verifies_before_enqueue():
+    _, sched = oracle_pair(8)
+    bad = Program("int32", (Instruction(OpCode.CMP_GT, 0),), name="no_terminal")
+    with pytest.raises(VerifyError):
+        sched.submit(bad, 0)
+    assert len(sched.queue_pair().sq) == 0  # rejected work never queues
+
+
+def test_scheduler_single_device_degenerate_path():
+    data = int32_blocks(12, seed=5)
+    dev = ZonedDevice(num_zones=2, zone_bytes=1024 * 1024, block_bytes=BLOCK)
+    dev.zone_append(0, data)
+    arr = StripedZoneArray(
+        [ZonedDevice(num_zones=2, zone_bytes=1024 * 1024, block_bytes=BLOCK)],
+        stripe_blocks=STRIPE)
+    arr.zone_append(0, data)
+    program = filter_count("int32", "le", 250)
+    want, _ = NvmCsd(dev).run_and_fetch(program, 0)
+    got, stats = OffloadScheduler(arr).run_and_fetch(program, 0)
+    assert int(want) == int(got)
+    assert stats.n_devices == 1
+
+
+def test_scheduler_offline_member_degrades_with_clear_error():
+    _, sched = oracle_pair(40)
+    sched.array.set_offline(0, device=2)
+    with pytest.raises(ArrayOffloadError, match="member device 2"):
+        sched.nvm_cmd_bpf_run(filter_count("int32", "gt", 0), 0)
+    # the failure is also visible on the completion queue, not just raised
+    comps = sched.queue_pair().cq.drain()
+    assert comps and not comps[-1].ok
+
+
+def test_scheduler_async_dispatcher_and_wait():
+    csd, sched = oracle_pair(40, seed=11)
+    program = filter_sum("int32", "lt", 0)
+    want, _ = csd.run_and_fetch(program, 0)
+    sched.start()
+    try:
+        cmd_ids = [sched.submit(program, 0) for _ in range(3)]
+        comps = [sched.wait(cid, timeout=60) for cid in cmd_ids]
+    finally:
+        sched.stop()
+    assert all(c.ok for c in comps)
+    assert all(int(c.value) == int(want) for c in comps)
+
+
+def test_scheduler_multi_tenant_stats_history():
+    _, sched = oracle_pair(40)
+    sched.register_tenant("analytics", weight=2)
+    sched.submit(filter_count("int32", "gt", 0), 0, tenant="analytics")
+    sched.submit(filter_count("int32", "lt", 0), 0)
+    assert sched.drain() == 2
+    assert len(sched.history) == 2
+    assert {s.program for s in sched.history} == {
+        "filter_count_gt", "filter_count_lt"}
+    assert all(s.movement_saved_bytes > 0 for s in sched.history)
