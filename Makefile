@@ -1,15 +1,22 @@
 # CI entry points. `make ci` is what the tier-1 gate runs: the full pytest
-# suite plus a fast benchmark smoke (filter + array scaling).
+# suite plus a fast benchmark smoke (filter + array scaling + hot-path
+# accounting) that also emits the machine-readable BENCH_hotpath.json.
 PYTHONPATH := src:$(PYTHONPATH)
 export PYTHONPATH
 
-.PHONY: test smoke ci bench
+.PHONY: test smoke ci bench bench-smoke
 
 test:
 	python -m pytest -x -q
 
 smoke:
-	python benchmarks/run.py --only filter,array
+	python benchmarks/run.py --only filter,array,hotpath --json
+
+# hot-path regression tripwire: the CI-size filter+array suites must fit the
+# wall-clock budget (measured ~7s on 2 cores incl. compiles; ~10x headroom so
+# only a real regression, not scheduler noise, trips it)
+bench-smoke:
+	python benchmarks/run.py --only filter,array --budget 90
 
 ci: test smoke
 

@@ -1,0 +1,166 @@
+"""Offload hot-path accounting: copies, compile-cache reuse, read/compute
+overlap.
+
+The paper's argument is that moving bytes is the bottleneck, so the emulation
+must account for ITS OWN data movement honestly. Three measurements:
+
+  1. **host bytes copied per offload** — the device counts ``bytes_copied``
+     (host-side duplications) separately from ``bytes_viewed`` (zero-copy
+     aliases of the backing buffer). The JIT/kernel tiers must reach XLA with
+     AT MOST one host-side copy; on a single device the typed view makes that
+     zero numpy-side copies (XLA's own device_put is the one unavoidable
+     move) — asserted here, not just reported.
+  2. **compile-cache hit rate** — distinct ``NvmCsd`` instances sharing one
+     :class:`~repro.core.cache.CompiledProgramCache` must reuse executables:
+     the second instance's offload reports ``jit_seconds == 0``.
+  3. **read/compute overlap** — with member bandwidth emulated, the array
+     scheduler's double-buffered prefetch must hide device transfer time
+     under execution; reported as ``overlap_ratio`` (1.0 = reads fully
+     hidden) for 1..4 devices.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.array import OffloadScheduler, StripedZoneArray
+from repro.core import CsdTier, NvmCsd, filter_count
+from repro.core.cache import CompiledProgramCache
+from repro.zns import ZonedDevice
+
+RAND_MAX = 2**31 - 1
+BLOCK = 4096
+
+
+def _fill(device, data_bytes: int, seed: int = 0) -> np.ndarray:
+    rng = np.random.default_rng(seed)
+    data = rng.integers(0, RAND_MAX, data_bytes // 4, dtype=np.int32)
+    device.zone_append(0, data)
+    return data
+
+
+def measure_copies(data_mib: int = 8, runs: int = 3) -> dict:
+    """Host-side bytes copied per single-device JIT-tier offload."""
+    data_bytes = data_mib * 1024 * 1024
+    dev = ZonedDevice(num_zones=1, zone_bytes=data_bytes, block_bytes=BLOCK)
+    data = _fill(dev, data_bytes)
+    csd = NvmCsd(dev)
+    program = filter_count("int32", "gt", RAND_MAX // 2)
+    csd.nvm_cmd_bpf_run(program, 0, tier=CsdTier.JIT)   # warm-up pays compile
+    copied0 = dev.stats["bytes_copied"]
+    viewed0 = dev.stats["bytes_viewed"]
+    times = []
+    for _ in range(runs):
+        t = time.perf_counter()
+        csd.nvm_cmd_bpf_run(program, 0, tier=CsdTier.JIT)
+        times.append(time.perf_counter() - t)
+    assert int(csd.nvm_cmd_bpf_result()) == int((data > RAND_MAX // 2).sum())
+    copied = (dev.stats["bytes_copied"] - copied0) / runs
+    viewed = (dev.stats["bytes_viewed"] - viewed0) / runs
+    # the acceptance bar is "at most ONE host-side copy per offload"; the
+    # zero-copy read path actually delivers ZERO numpy-side copies (XLA
+    # device_put is the single remaining move, inside the executable call),
+    # so assert the stronger invariant
+    assert copied == 0, (
+        f"zero-copy read path regressed: {copied} host bytes copied/offload "
+        f"for a {data_bytes}-byte extent")
+    return {"seconds": float(np.mean(times)), "bytes_copied": copied,
+            "bytes_viewed": viewed, "extent_bytes": data_bytes}
+
+
+def measure_cache(data_mib: int = 8) -> dict:
+    """Compile reuse across NvmCsd instances sharing one cache."""
+    data_bytes = data_mib * 1024 * 1024
+    shared = CompiledProgramCache()
+    program = filter_count("int32", "gt", RAND_MAX // 2)
+    jit_seconds = []
+    results = []
+    for seed in range(3):
+        dev = ZonedDevice(num_zones=1, zone_bytes=data_bytes, block_bytes=BLOCK)
+        _fill(dev, data_bytes)       # same seed -> same data on every device
+        csd = NvmCsd(dev, cache=shared)
+        stats = csd.nvm_cmd_bpf_run(program, 0, tier=CsdTier.JIT)
+        jit_seconds.append(stats.jit_seconds)
+        results.append(int(csd.nvm_cmd_bpf_result()))
+    assert len(set(results)) == 1, "shared-cache executions disagree"
+    assert all(s == 0.0 for s in jit_seconds[1:]), \
+        f"cache hit still compiled: {jit_seconds}"
+    cs = shared.stats()
+    return {"first_jit_seconds": jit_seconds[0], "hit_rate": cs.hit_rate,
+            "hits": cs.hits, "misses": cs.misses, "evictions": cs.evictions}
+
+
+def measure_overlap(
+    *,
+    widths: tuple[int, ...] = (1, 2, 4),
+    data_mib: int = 8,
+    stripe_blocks: int = 64,
+    read_us_per_block: float = 2.0,
+    runs: int = 3,
+) -> list[dict]:
+    """Read/compute overlap ratio of striped offloads, 1..4 devices."""
+    data_bytes = data_mib * 1024 * 1024
+    rng = np.random.default_rng(0)
+    data = rng.integers(0, RAND_MAX, data_bytes // 4, dtype=np.int32)
+    expected = int((data > RAND_MAX // 2).sum())
+    program = filter_count("int32", "gt", RAND_MAX // 2)
+    out = []
+    for n in widths:
+        devices = [ZonedDevice(num_zones=1, zone_bytes=data_bytes,
+                               block_bytes=BLOCK,
+                               read_us_per_block=read_us_per_block)
+                   for _ in range(n)]
+        with StripedZoneArray(devices, stripe_blocks=stripe_blocks) as array:
+            array.zone_append(0, data)
+            copied0 = array.stats["bytes_copied"]
+            with OffloadScheduler(array) as sched:
+                sched.nvm_cmd_bpf_run(program, 0)          # warm-up
+                overlap, times = [], []
+                for _ in range(runs):
+                    t = time.perf_counter()
+                    stats = sched.nvm_cmd_bpf_run(program, 0)
+                    times.append(time.perf_counter() - t)
+                    overlap.append(stats.overlap_ratio)
+                assert int(sched.nvm_cmd_bpf_result()) == expected
+        copied = (array.stats["bytes_copied"] - copied0) / (runs + 1)
+        out.append({
+            "devices": n,
+            "seconds": float(np.mean(times)),
+            "mib_per_s": data_mib / float(np.mean(times)),
+            "overlap_ratio": float(np.mean(overlap)),
+            "read_seconds": stats.read_seconds,
+            "compute_seconds": stats.compute_seconds,
+            "bytes_copied_per_offload": copied,
+        })
+    return out
+
+
+def main(data_mib: int = 8, runs: int = 3) -> list[str]:
+    rows = []
+    c = measure_copies(data_mib=data_mib, runs=runs)
+    rows.append(
+        f"hotpath_copies_jit,{c['seconds'] * 1e6:.0f},"
+        f"bytes_copied_per_offload={c['bytes_copied']:.0f};"
+        f"bytes_viewed_per_offload={c['bytes_viewed']:.0f};"
+        f"extent_bytes={c['extent_bytes']}"
+    )
+    k = measure_cache(data_mib=data_mib)
+    rows.append(
+        f"hotpath_compile_cache,{k['first_jit_seconds'] * 1e6:.0f},"
+        f"hit_rate={k['hit_rate']:.2f};hits={k['hits']};misses={k['misses']};"
+        f"evictions={k['evictions']}"
+    )
+    for r in measure_overlap(data_mib=data_mib, runs=runs):
+        rows.append(
+            f"hotpath_overlap_{r['devices']}dev,{r['seconds'] * 1e6:.0f},"
+            f"overlap_ratio={r['overlap_ratio']:.2f};"
+            f"mib_per_s={r['mib_per_s']:.1f};"
+            f"bytes_copied_per_offload={r['bytes_copied_per_offload']:.0f}"
+        )
+    return rows
+
+
+if __name__ == "__main__":
+    for row in main():
+        print(row)

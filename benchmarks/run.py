@@ -2,12 +2,48 @@
 
 Prints ``name,us_per_call,derived`` CSV lines. Scaled-down sizes by default
 (CI-friendly on 1 CPU core); pass --full for the paper's exact 256 MiB zone.
+``--json`` additionally writes ``BENCH_hotpath.json`` (per-suite rows with
+parsed derived metrics) so the perf trajectory is machine-readable across
+PRs; ``--budget SECONDS`` fails the run loudly when it exceeds a wall-clock
+budget — the CI tripwire for hot-path regressions.
 """
 from __future__ import annotations
 
 import argparse
+import json
 import sys
+import time
 import traceback
+
+JSON_PATH = "BENCH_hotpath.json"
+
+
+def _parse_derived(derived: str) -> dict:
+    """'k1=v1;k2=v2' -> {k1: v1, ...} with numeric values parsed."""
+    out: dict = {}
+    for part in derived.split(";"):
+        if "=" not in part:
+            continue
+        k, v = part.split("=", 1)
+        try:
+            out[k] = int(v)
+        except ValueError:
+            try:
+                out[k] = float(v.rstrip("x"))
+            except ValueError:
+                out[k] = v
+    return out
+
+
+def _row_record(row: str) -> dict:
+    name, us, derived = row.split(",", 2)
+    try:
+        us_per_call = float(us)
+    except ValueError:
+        us_per_call = None            # ERROR rows keep the raw text
+    return {"name": name, "us_per_call": us_per_call,
+            "derived": _parse_derived(derived) if us_per_call is not None
+            else {"error": derived}}
 
 
 def main() -> int:
@@ -15,19 +51,25 @@ def main() -> int:
     ap.add_argument("--full", action="store_true",
                     help="paper-exact sizes (256 MiB zone, 5 runs)")
     ap.add_argument("--only", default=None,
-                    help="comma-separated subset: filter,toolchain,pushdown,"
-                         "checkpoint,paged_attn,roofline,array")
+                    help="comma-separated subset: filter,hotpath,toolchain,"
+                         "pushdown,checkpoint,paged_attn,roofline,array")
+    ap.add_argument("--json", action="store_true",
+                    help=f"write per-suite results to {JSON_PATH}")
+    ap.add_argument("--budget", type=float, default=None,
+                    help="fail (exit 1) if the run exceeds this many seconds")
     args = ap.parse_args()
 
     from benchmarks import (bench_array, bench_checkpoint, bench_filter,
-                            bench_paged_attn, bench_pushdown, bench_toolchain,
-                            roofline)
+                            bench_hotpath, bench_paged_attn, bench_pushdown,
+                            bench_toolchain, roofline)
 
     suites = {
         "filter": lambda: bench_filter.main(
             zone_mib=256 if args.full else 32, runs=5 if args.full else 3),
         "array": lambda: bench_array.main(
             data_mib=64 if args.full else 16, runs=5 if args.full else 3),
+        "hotpath": lambda: bench_hotpath.main(
+            data_mib=32 if args.full else 8, runs=5 if args.full else 3),
         "toolchain": bench_toolchain.main,
         "pushdown": bench_pushdown.main,
         "checkpoint": bench_checkpoint.main,
@@ -36,15 +78,39 @@ def main() -> int:
     }
     chosen = args.only.split(",") if args.only else list(suites)
 
+    t0 = time.perf_counter()
     print("name,us_per_call,derived")
     failures = 0
+    results: dict[str, list[dict]] = {}
     for name in chosen:
         try:
-            for row in suites[name]():
+            rows = suites[name]()
+            for row in rows:
                 print(row)
+            results[name] = [_row_record(r) for r in rows]
         except Exception:
             failures += 1
-            print(f"{name},ERROR,{traceback.format_exc(limit=1)!r}")
+            err = traceback.format_exc(limit=1)
+            print(f"{name},ERROR,{err!r}")
+            results[name] = [{"name": name, "us_per_call": None,
+                              "derived": {"error": err}}]
+    elapsed = time.perf_counter() - t0
+
+    if args.json:
+        payload = {
+            "suites": results,
+            "failures": failures,
+            "elapsed_seconds": round(elapsed, 3),
+            "full_sizes": bool(args.full),
+        }
+        with open(JSON_PATH, "w") as f:
+            json.dump(payload, f, indent=2, sort_keys=True)
+        print(f"# wrote {JSON_PATH}", file=sys.stderr)
+
+    if args.budget is not None and elapsed > args.budget:
+        print(f"# BUDGET EXCEEDED: {elapsed:.1f}s > {args.budget:.1f}s "
+              f"wall-clock budget — hot-path regression?", file=sys.stderr)
+        return 1
     return 1 if failures else 0
 
 

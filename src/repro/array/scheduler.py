@@ -13,18 +13,24 @@ The :class:`OffloadScheduler` scales that contract to a
   3. **fan out** — the logical extent decomposes into stripe chunks, each
      contiguous on exactly one member device; every device executes its
      chunks concurrently on the existing interp/jit/kernel tiers. Same-shape
-     chunks on the JIT tier are batched into ONE vmapped XLA call per device
-     (:func:`repro.core.vm.jit_program_batched`);
+     chunks are batched into ONE compiled call per device group: a vmapped
+     XLA call on the JIT tier (:func:`repro.core.vm.jit_program_batched`) or
+     a grid-batched Pallas call on the kernel tier
+     (:func:`repro.kernels.zone_filter.ops.kernel_program_batched`), with the
+     next group's device read prefetched while the current group executes
+     (:func:`repro.core.prefetch.prefetched`);
   4. **scatter-gather** — per-chunk results are re-combined in logical
-     stripe order by a program-aware combiner: SUM/COUNT re-add, MIN/MAX
-     re-reduce, HIST re-accumulates, SELECT/SELECT_REC concatenate the first
-     ``capacity`` matches in logical order — bit-identical to the
-     single-device result for COUNT/MIN/MAX/SELECT and for SUM over integer
-     streams (float SUM may differ by summation order, exactly as the tiers
-     already may);
+     stripe order by a program-aware combiner: SUM/COUNT re-add (float SUM
+     via Kahan compensated f64 accumulation, so results are identical for
+     every array width over the same logical data), MIN/MAX re-reduce, HIST
+     re-accumulates, SELECT/SELECT_REC concatenate the first ``capacity``
+     matches in logical order — bit-identical to the single-device result
+     for COUNT/MIN/MAX/SELECT and for SUM over integer streams (float SUM
+     may differ from a chunk-free single device by summation order, exactly
+     as the tiers already may);
   5. **aggregate stats** — one :class:`ArrayOffloadStats` per command rolls
      up bytes read on every member, bytes returned to the host, verify/JIT/
-     exec time, and the fan-out shape.
+     read/exec time, compile-cache hits, and the fan-out shape.
 
 A 1-device array degrades to the ``NvmCsd`` semantics — the degenerate path.
 """
@@ -38,6 +44,7 @@ from typing import Optional
 
 import numpy as np
 
+from repro.core.cache import CompiledProgramCache
 from repro.core.csd import (
     CsdTier,
     OffloadStats,
@@ -45,9 +52,10 @@ from repro.core.csd import (
     extent_geometry,
     resolve_tier,
 )
+from repro.core.prefetch import prefetched
 from repro.core.programs import OpCode, Program
 from repro.core.verifier import VerifierLimits, verify_program, verify_zone_access
-from repro.core.vm import _SUM_WIDEN, jit_program, jit_program_batched
+from repro.core.vm import _SUM_WIDEN, jit_program_batched
 from repro.array.queues import (
     Completion,
     OffloadCommand,
@@ -69,15 +77,60 @@ class ArrayOffloadError(Exception):
 
 @dataclass
 class ArrayOffloadStats(OffloadStats):
-    """Per-command statistics aggregated over the whole array fan-out."""
+    """Per-command statistics aggregated over the whole array fan-out.
+
+    ``read_seconds`` sums time spent inside member-device transfers across
+    all worker threads; because group reads prefetch under execution, it may
+    exceed the ``exec_seconds`` wall time — that surplus IS the overlap.
+    """
 
     n_devices: int = 1
     n_chunks: int = 1
-    batched_chunks: int = 0        # chunks executed via the vmapped JIT path
+    batched_chunks: int = 0        # chunks executed via a batched compiled call
+    compute_seconds: float = 0.0   # time inside compiled/interp execution only
+    # sum over device workers of max(read + compute - worker wall, 0): the
+    # transfer time each worker hid WITHIN its own device via the prefetcher.
+    # Measured per worker so cross-device parallelism cannot inflate it —
+    # with prefetch disabled this is ~0 even on a wide array.
+    overlap_seconds: float = 0.0
 
     @property
     def fanout(self) -> str:
         return f"{self.n_chunks} chunks / {self.n_devices} devices"
+
+    @property
+    def overlap_ratio(self) -> float:
+        """Fraction of device-transfer time hidden under that same device's
+        execution (1.0 = reads fully prefetched under compute)."""
+        return min(self.overlap_seconds / self.read_seconds, 1.0) \
+            if self.read_seconds > 0 else 0.0
+
+
+@dataclass
+class _DeviceRun:
+    """Accumulator for one device worker's share of a fan-out (also used to
+    merge the per-device shares into the command totals)."""
+
+    vals: dict    # chunk index -> value
+    compile_s: float = 0.0
+    insns: int = 0
+    batched: int = 0
+    read_s: float = 0.0
+    compute_s: float = 0.0
+    overlap_s: float = 0.0
+    hits: int = 0
+    misses: int = 0
+
+    def merge(self, other: "_DeviceRun") -> None:
+        self.vals.update(other.vals)
+        self.compile_s += other.compile_s
+        self.insns += other.insns
+        self.batched += other.batched
+        self.read_s += other.read_s
+        self.compute_s += other.compute_s
+        self.overlap_s += other.overlap_s
+        self.hits += other.hits
+        self.misses += other.misses
 
 
 class OffloadScheduler:
@@ -99,6 +152,8 @@ class OffloadScheduler:
         max_workers: Optional[int] = None,
         queue_depth: int = 64,
         completion_backlog: int = 1024,
+        cache: Optional[CompiledProgramCache] = None,
+        prefetch_depth: int = 2,
     ):
         if array.stripe_blocks % pages_per_read:
             raise ValueError(
@@ -111,19 +166,23 @@ class OffloadScheduler:
         self.limits = limits
         self.queue_depth = queue_depth
         self.completion_backlog = completion_backlog
+        self.prefetch_depth = int(prefetch_depth)
         self._pool = concurrent.futures.ThreadPoolExecutor(
             max_workers=max_workers or max(array.n_devices, 1))
-        # one JIT cache per member device would also work; programs are
-        # device-agnostic so a shared cache maximizes reuse
-        self._jit_cache: dict = {}
-        self._batched_cache: dict = {}
+        # reads of group k+1 run here while the worker executes group k
+        self._prefetch_pool = concurrent.futures.ThreadPoolExecutor(
+            max_workers=max(array.n_devices, 1),
+            thread_name_prefix="chunk-prefetch")
+        # ONE cache for every tier and batch shape; programs are
+        # device-agnostic so sharing (also across schedulers/CSDs, via the
+        # ``cache`` argument) maximizes compile reuse
+        self.cache = cache if cache is not None else CompiledProgramCache()
         self._pairs: dict[str, QueuePair] = {}
         self._arbiter = WeightedRoundRobinArbiter()
         self._completions: dict[int, Completion] = {}
         self._watched: set[int] = set()   # cmd_ids a sync caller will wait() on
         self._pending: set[int] = set()   # submitted, not yet completed
         self._comp_cond = threading.Condition()
-        self._compile_lock = threading.Lock()
         self._result: Optional[Completion] = None
         self._thread: Optional[threading.Thread] = None
         self._stop = threading.Event()
@@ -303,6 +362,7 @@ class OffloadScheduler:
         threads. The scheduler is unusable afterwards; the array is not."""
         self.stop()
         self._pool.shutdown(wait=True)
+        self._prefetch_pool.shutdown(wait=True)
 
     def __enter__(self) -> "OffloadScheduler":
         return self
@@ -350,22 +410,9 @@ class OffloadScheduler:
         return comp.value, comp.stats
 
     # ---------------------------------------------------------- execution
-    def _compiled(self, cache: dict, key: tuple, builder):
-        """Compile-once under a lock: device worker threads racing on the
-        same (program, shape) must not each pay the XLA compile, nor
-        double-count it into jit_seconds."""
-        with self._compile_lock:
-            jp = cache.get(key)
-            if jp is not None:
-                return jp, 0.0
-            jp = builder()
-            cache[key] = jp
-            return jp, jp.compile_seconds
-
     def _execute(self, cmd: OffloadCommand) -> tuple[object, ArrayOffloadStats]:
         program, zone_id, tier = cmd.program, cmd.zone_id, cmd.tier
         array = self.array
-        dtype = np.dtype(program.input_dtype)
         chunks = array.chunks(zone_id, cmd.block_off, cmd.n_blocks)
         by_dev: dict[int, list[StripeChunk]] = {}
         for c in chunks:
@@ -378,20 +425,16 @@ class OffloadScheduler:
             for d, dev_chunks in by_dev.items()
         }
         per_chunk: dict[int, object] = {}
-        jit_seconds = 0.0
-        insns_executed = 0
-        batched_chunks = 0
+        agg = _DeviceRun({})
         errors: list[BaseException] = []
         for fut in concurrent.futures.as_completed(futures):
             try:
-                vals, compile_s, insns, n_batched = fut.result()
+                run = fut.result()
             except ArrayOffloadError as e:
                 errors.append(e)
                 continue
-            per_chunk.update(vals)
-            jit_seconds += compile_s
-            insns_executed += insns
-            batched_chunks += n_batched
+            per_chunk.update(run.vals)
+            agg.merge(run)
         if errors:
             raise errors[0]
 
@@ -399,7 +442,7 @@ class OffloadScheduler:
         value = self._combine(program, ordered)
         # keep exec and JIT time disjoint, as NvmCsd reports them (compiles
         # happen inside the fan-out wall time on cache misses)
-        exec_seconds = max(time.perf_counter() - t0 - jit_seconds, 0.0)
+        exec_seconds = max(time.perf_counter() - t0 - agg.compile_s, 0.0)
 
         if isinstance(value, tuple):
             bytes_returned = np.asarray(value[0]).nbytes + 8
@@ -409,99 +452,133 @@ class OffloadScheduler:
             program=program.name, tier=tier, zone_id=zone_id,
             pages=cmd.n_blocks // self.pages_per_read,
             insns_verified=cmd.insns_verified,
-            insns_executed=insns_executed,
+            insns_executed=agg.insns,
             bytes_read=cmd.n_blocks * array.block_bytes,
             bytes_returned=bytes_returned,
-            jit_seconds=jit_seconds, exec_seconds=exec_seconds,
+            jit_seconds=agg.compile_s, exec_seconds=exec_seconds,
+            read_seconds=agg.read_s, compute_seconds=agg.compute_s,
+            overlap_seconds=agg.overlap_s,
+            cache_hits=agg.hits, cache_misses=agg.misses,
             n_devices=len(by_dev), n_chunks=len(chunks),
-            batched_chunks=batched_chunks,
+            batched_chunks=agg.batched,
         )
         return value, stats
 
     def _run_device_chunks(
         self, dev_idx: int, zone_id: int, dev_chunks: list[StripeChunk],
         program: Program, tier: str,
-    ) -> tuple[dict[int, object], float, int, int]:
-        """Execute one device's chunks; returns ({chunk index: value},
-        compile seconds, insns executed, chunks batched)."""
+    ) -> "_DeviceRun":
+        """Execute one device's chunks (full-size chunks batched into one
+        compiled call on the jit/kernel tiers, the rest singly)."""
         device = self.array.devices[dev_idx]
         stripe = self.array.stripe_blocks
         full = [c for c in dev_chunks if c.n_blocks == stripe]
         rest = [c for c in dev_chunks if c.n_blocks != stripe]
-        vals: dict[int, object] = {}
-        compile_s = 0.0
-        insns = 0
-        batched = 0
+        run = _DeviceRun({})
+        t_worker = time.perf_counter()
         try:
-            if tier == CsdTier.JIT and len(full) > 1:
-                vals_b, compile_s = self._run_batched(
-                    device, zone_id, full, program)
-                vals.update(vals_b)
-                insns += program.n_insns * len(full) * (stripe // self.pages_per_read)
-                batched += len(full)
+            # a single full chunk reuses the plain single-chunk executable
+            # (shared with NvmCsd) instead of compiling a batch-of-1 variant
+            if tier in (CsdTier.JIT, CsdTier.KERNEL) and len(full) > 1:
+                run.merge(self._run_batched(device, zone_id, full, program, tier))
+                run.insns += program.n_insns * len(full) * (
+                    stripe // self.pages_per_read)
+                run.batched += len(full)
             else:
                 rest = full + rest
             for c in rest:
-                if tier == CsdTier.JIT:
-                    # pre-warm the shared cache race-free so execute_extent
-                    # hits it (its own get/set is not compile-once safe)
-                    page_elems, n_pages = extent_geometry(
-                        self.array.block_bytes, np.dtype(program.input_dtype),
-                        c.n_blocks, self.pages_per_read)
-                    _, cs = self._compiled(
-                        self._jit_cache, (program, n_pages, page_elems),
-                        lambda: jit_program(program, n_pages, page_elems))
-                    compile_s += cs
                 result = execute_extent(
                     device, program, zone_id, c.local_off, c.n_blocks,
                     tier=tier, pages_per_read=self.pages_per_read,
-                    jit_cache=self._jit_cache,
+                    cache=self.cache, prefetch_depth=self.prefetch_depth,
                 )
-                vals[c.index] = result.value
-                compile_s += result.compile_seconds
-                insns += result.insns_executed
+                run.vals[c.index] = result.value
+                run.compile_s += result.compile_seconds
+                run.insns += result.insns_executed
+                run.read_s += result.read_seconds
+                run.compute_s += result.exec_seconds
+                run.hits += result.cache_hits
+                run.misses += result.cache_misses
         except ZNSError as e:
             raise ArrayOffloadError(
                 f"offload degraded: member device {dev_idx} failed on zone "
                 f"{zone_id}: {e}"
             ) from e
-        return vals, compile_s, insns, batched
+        # overlap WITHIN this worker: transfer+compute time that exceeded the
+        # worker's own wall clock must have run concurrently (the prefetcher)
+        wall = time.perf_counter() - t_worker - run.compile_s
+        run.overlap_s = max(run.read_s + run.compute_s - max(wall, 0.0), 0.0)
+        return run
 
     def _run_batched(
         self, device, zone_id: int, full: list[StripeChunk], program: Program,
-    ) -> tuple[dict[int, object], float]:
-        """Execute all full-size chunks of one device in a single vmapped XLA
-        call. Full chunks of a device are contiguous in member-local space, so
-        one read covers them all."""
+        tier: str,
+    ) -> "_DeviceRun":
+        """Execute all full-size chunks of one device through batched compiled
+        calls — ONE vmapped XLA call (jit tier) or ONE grid-batched Pallas
+        call (kernel tier) per chunk group. Full chunks of a device are
+        contiguous in member-local space, so one read covers each group.
+
+        Double buffering: the chunks split into up to ``prefetch_depth``
+        equal-size groups and group ``g+1``'s device read runs on the
+        prefetch pool while group ``g`` executes — the read/compute overlap
+        in-storage processing lives on.
+        """
         stripe = self.array.stripe_blocks
         dtype = np.dtype(program.input_dtype)
         page_elems, chunk_pages = extent_geometry(
             self.array.block_bytes, dtype, stripe, self.pages_per_read)
         m = len(full)
-        # bucket the batch to a power of two and zero-pad, so compiles are
+        # Split into prefetchable groups, then bucket the group size to a
+        # power of two and zero-pad the tail group, so compiles stay
         # O(#programs x log(max chunks/device)) instead of one per distinct
-        # per-device chunk count; pad-row outputs are discarded below
-        m_b = 1 << (m - 1).bit_length()
-        jp, compile_s = self._compiled(
-            self._batched_cache, (program, m_b, chunk_pages, page_elems),
-            lambda: jit_program_batched(program, m_b, chunk_pages, page_elems))
-        raw = device.read_blocks(zone_id, full[0].local_off, m * stripe)
-        pages = np.frombuffer(raw.tobytes(), dtype=dtype).reshape(
-            m, chunk_pages, page_elems)
-        if m_b != m:
-            pages = np.concatenate(
-                [pages, np.zeros((m_b - m, chunk_pages, page_elems), dtype)])
-        out = jp(pages)
-        vals: dict[int, object] = {}
-        if isinstance(out, tuple):
-            bufs, ns = (np.asarray(v) for v in out)
-            for i, c in enumerate(full):
-                vals[c.index] = (bufs[i], ns[i])
+        # per-device chunk count; pad-row outputs are discarded below.
+        n_groups = max(min(self.prefetch_depth, m), 1)
+        m_b = 1 << (-(-m // n_groups) - 1).bit_length()
+        groups = [full[i:i + m_b] for i in range(0, m, m_b)]
+
+        def fetch(group: list[StripeChunk]):
+            t0 = time.perf_counter()
+            pages = device.read_extent(
+                zone_id, group[0].local_off, len(group) * stripe,
+                dtype).reshape(len(group), chunk_pages, page_elems)
+            return pages, time.perf_counter() - t0
+
+        run = _DeviceRun({})
+        fetched = prefetched(groups, fetch, executor=self._prefetch_pool,
+                             depth=max(self.prefetch_depth - 1, 1))
+        if tier == CsdTier.KERNEL:
+            from repro.kernels.zone_filter import ops as zf_ops
+            key = ("kernel_batched", program, m_b, chunk_pages, page_elems)
+            builder = lambda: zf_ops.kernel_program_batched(
+                program, m_b, chunk_pages, page_elems)
         else:
-            out = np.asarray(out)
-            for i, c in enumerate(full):
-                vals[c.index] = out[i]
-        return vals, compile_s
+            key = ("jit_batched", program, m_b, chunk_pages, page_elems)
+            builder = lambda: jit_program_batched(
+                program, m_b, chunk_pages, page_elems)
+        jp, compile_s, hit = self.cache.get_or_build(key, builder)
+        run.compile_s += compile_s
+        run.hits += int(hit)
+        run.misses += int(not hit)
+
+        for group, (pages, read_s) in zip(groups, fetched):
+            run.read_s += read_s
+            if len(group) != m_b:
+                pages = np.concatenate(
+                    [pages, np.zeros((m_b - len(group), chunk_pages,
+                                      page_elems), dtype)])
+            t0 = time.perf_counter()
+            out = jp(pages)
+            if isinstance(out, tuple):
+                bufs, ns = (np.asarray(v) for v in out)
+                for i, c in enumerate(group):
+                    run.vals[c.index] = (bufs[i], ns[i])
+            else:
+                out = np.asarray(out)
+                for i, c in enumerate(group):
+                    run.vals[c.index] = out[i]
+            run.compute_s += time.perf_counter() - t0
+        return run
 
     # ----------------------------------------------------------- combiner
     def _combine(self, program: Program, ordered: list[object]) -> object:
@@ -514,6 +591,21 @@ class OffloadScheduler:
             return np.int64(sum(int(v) for v in ordered))
         if term == OpCode.RED_SUM:
             widen = _SUM_WIDEN[dtype]
+            if np.issubdtype(widen, np.floating):
+                # Kahan compensated accumulation over the per-chunk partials,
+                # in logical stripe order. The partials themselves depend only
+                # on the chunk decomposition (stripe_blocks), not on how many
+                # devices the chunks landed on — so with compensation the
+                # re-reduction is bit-identical for every array width over
+                # the same logical data.
+                acc = widen(0)
+                comp = widen(0)
+                for v in ordered:
+                    y = widen(np.asarray(v)[()]) - comp
+                    t = widen(acc + y)
+                    comp = widen((t - acc) - y)
+                    acc = t
+                return acc
             acc = widen(0)
             for v in ordered:
                 acc = widen(acc + widen(np.asarray(v)[()]))

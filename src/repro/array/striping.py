@@ -168,10 +168,16 @@ class StripedZoneArray:
         self.zone_bytes = self.zone_blocks * self.block_bytes
         self._lock = threading.RLock()
         # member transfers fan out in parallel — the whole point of striping
-        # is aggregate bandwidth; a 1-wide array skips the thread hop
+        # is aggregate bandwidth; a 1-wide array skips the thread hop. Four
+        # workers per member ~ a per-member queue depth, so CONCURRENT
+        # logical reads (different zones/tenants) keep overlapping instead of
+        # queuing behind one read's emulated transfer time.
         self._io = concurrent.futures.ThreadPoolExecutor(
-            max_workers=self.n_devices) if self.n_devices > 1 else None
+            max_workers=4 * self.n_devices) if self.n_devices > 1 else None
         self.zones = [LogicalZone(self, z) for z in range(self.num_zones)]
+        # array-level host-copy accounting (member counters only see their
+        # own transfers; the stripe gather-copy happens here)
+        self._gather_bytes_copied = 0
 
     def _fanout(self, tasks: list[Callable[[], object]]) -> list[object]:
         """Run member-device transfers concurrently (sequentially when the
@@ -266,7 +272,18 @@ class StripedZoneArray:
     # --------------------------------------------------------------- read
     def read_blocks(self, zone_id: int, block_off: int, nblocks: int) -> np.ndarray:
         """Striped read: one contiguous member read per device, interleaved
-        back into logical order."""
+        back into logical order.
+
+        Only the bounds check and address math run under the array lock;
+        member transfers (and their emulated bandwidth time) fan out outside
+        it, so concurrent array-level reads — different zones, different
+        tenants — overlap instead of queuing behind one logical read. Safe
+        against concurrent appends because the logical write pointer only
+        covers member blocks whose appends have fully landed (appends update
+        it last, under this lock). Resetting + rewriting a zone while a read
+        of it is in flight is a host protocol bug (same contract as
+        ``ZonedDevice.read_blocks_view``, and as real ZNS hardware).
+        """
         with self._lock:
             z = self.zone(zone_id)
             if z.state == ZoneState.OFFLINE:
@@ -276,27 +293,51 @@ class StripedZoneArray:
                     f"read [{block_off},{block_off + nblocks}) beyond write pointer "
                     f"{z.write_pointer} of logical zone {zone_id}"
                 )
-            out = np.empty((nblocks, self.block_bytes), np.uint8)
-            if nblocks == 0:
-                return out.reshape(-1)
-            bidx = np.arange(block_off, block_off + nblocks)
-            chunk = bidx // self.stripe_blocks
-            owner = chunk % self.n_devices
-            local = (chunk // self.n_devices) * self.stripe_blocks \
-                + bidx % self.stripe_blocks
-            def read_share(d: int, dev: ZonedDevice) -> None:
-                sel = owner == d
-                if not sel.any():
-                    return
-                lsel = local[sel]
-                raw = dev.read_blocks(zone_id, int(lsel[0]), int(lsel.size))
-                out[sel] = raw.reshape(-1, self.block_bytes)
-
-            self._fanout([
-                (lambda d=d, dev=dev: read_share(d, dev))
-                for d, dev in enumerate(self.devices)
-            ])
+        out = np.empty((nblocks, self.block_bytes), np.uint8)
+        if nblocks == 0:
             return out.reshape(-1)
+        bidx = np.arange(block_off, block_off + nblocks)
+        chunk = bidx // self.stripe_blocks
+        owner = chunk % self.n_devices
+        local = (chunk // self.n_devices) * self.stripe_blocks \
+            + bidx % self.stripe_blocks
+
+        def read_share(d: int, dev: ZonedDevice) -> None:
+            sel = owner == d
+            if not sel.any():
+                return
+            lsel = local[sel]
+            # member view -> interleave copy: ONE host-side copy total
+            # per byte instead of the copy-then-gather double move
+            raw = dev.read_blocks_view(zone_id, int(lsel[0]), int(lsel.size))
+            out[sel] = raw.reshape(-1, self.block_bytes)
+
+        self._fanout([
+            (lambda d=d, dev=dev: read_share(d, dev))
+            for d, dev in enumerate(self.devices)
+        ])
+        with self._lock:
+            self._gather_bytes_copied += out.nbytes
+        return out.reshape(-1)
+
+    def read_blocks_view(self, zone_id: int, block_off: int, nblocks: int) -> np.ndarray:
+        """Minimal-copy read for the ``ZonedDevice`` view contract: a striped
+        extent is not contiguous in any member buffer, so the stripe gather
+        into logical order IS the single unavoidable copy."""
+        out = self.read_blocks(zone_id, block_off, nblocks)
+        out.flags.writeable = False
+        return out
+
+    def read_extent(self, zone_id: int, block_off: int, nblocks: int,
+                    dtype: np.dtype | str) -> np.ndarray:
+        """Dtype-typed minimal-copy read (one gather copy; the reinterpreting
+        view is free — block alignment exceeds any element alignment)."""
+        dtype = np.dtype(dtype)
+        if self.block_bytes % dtype.itemsize:
+            raise ValueError(
+                f"block size {self.block_bytes} not a multiple of "
+                f"{dtype} itemsize {dtype.itemsize}")
+        return self.read_blocks_view(zone_id, block_off, nblocks).view(dtype)
 
     def read_zone(self, zone_id: int) -> np.ndarray:
         return self.read_blocks(zone_id, 0, self.zone(zone_id).write_pointer)
@@ -347,11 +388,13 @@ class StripedZoneArray:
 
     @property
     def stats(self) -> dict:
-        """Aggregate member device statistics (NVMe log-page analogue)."""
+        """Aggregate member device statistics (NVMe log-page analogue), plus
+        the array-level stripe gather copies."""
         agg: dict[str, int] = {}
         for dev in self.devices:
             for k, v in dev.stats.items():
                 agg[k] = agg.get(k, 0) + v
+        agg["bytes_copied"] = agg.get("bytes_copied", 0) + self._gather_bytes_copied
         return agg
 
     def utilization(self) -> float:

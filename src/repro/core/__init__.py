@@ -4,7 +4,11 @@
   * :mod:`repro.core.verifier` — bounded-execution / memory-safety verifier
   * :mod:`repro.core.vm`       — interpreter + XLA-JIT execution tiers
   * :mod:`repro.core.csd`      — the NvmCsd device (two-part API, stats)
+  * :mod:`repro.core.cache`    — shared compiled-executable cache
+  * :mod:`repro.core.prefetch` — read/compute overlap primitives
 """
+from repro.core.cache import CacheStats, CompiledProgramCache, default_cache
+from repro.core.prefetch import LookaheadReader, prefetched
 from repro.core.programs import (
     Instruction,
     OpCode,
@@ -25,4 +29,6 @@ __all__ = [
     "VerifyError", "VerifierLimits", "verify_program",
     "OffloadResult", "interpret_program", "jit_program", "run_oracle",
     "NvmCsd", "CsdTier", "OffloadStats",
+    "CacheStats", "CompiledProgramCache", "default_cache",
+    "LookaheadReader", "prefetched",
 ]

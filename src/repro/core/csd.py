@@ -27,10 +27,11 @@ from typing import Optional
 
 import numpy as np
 
+from repro.core.cache import CompiledProgramCache
+from repro.core.prefetch import LookaheadReader
 from repro.core.programs import OpCode, Program
 from repro.core.verifier import VerifierLimits, verify_program, verify_zone_access
 from repro.core.vm import (
-    JittedProgram,
     OffloadResult,
     interpret_program,
     jit_program,
@@ -83,40 +84,54 @@ def execute_extent(
     *,
     tier: str,
     pages_per_read: int = 1,
-    jit_cache: Optional[dict] = None,
+    cache: Optional[CompiledProgramCache] = None,
+    prefetch_depth: int = 2,
 ) -> OffloadResult:
     """Execute an (already verified) program over one zone extent on one
     device, on the requested tier. The single-device execution engine shared
     by :class:`NvmCsd` and the array scheduler (which calls it per stripe
     chunk when the batched path does not apply).
 
-    ``result.compile_seconds`` is non-zero only when this call compiled a
-    fresh JIT executable (cache miss in ``jit_cache``).
+    The extent reaches the execution tier zero-copy (``read_extent`` hands
+    out a typed view of the device buffer; XLA's own device_put is the one
+    unavoidable host-side move). ``result.compile_seconds`` is non-zero only
+    when this call compiled a fresh executable (miss in ``cache``).
     """
     tier = resolve_tier(tier, program)   # kernel -> jit for non-kernelizable
     dtype = np.dtype(program.input_dtype)
     page_elems, n_pages = extent_geometry(
         device.block_bytes, dtype, n_blocks, pages_per_read)
     insns_bound = program.n_insns * n_pages
-    if jit_cache is None:
-        jit_cache = {}
+    if cache is None:
+        cache = CompiledProgramCache(capacity=4)  # private one-shot cache
 
     if tier == CsdTier.INTERP:
         def read_page(p: int) -> np.ndarray:
-            return device.read_blocks(
+            return device.read_blocks_view(
                 zone_id, block_off + p * pages_per_read, pages_per_read)
+        # The lookahead pays a per-page thread handoff, so it only runs when
+        # there is transfer time to hide (the device models bandwidth);
+        # against pure host memory it would be all overhead.
+        if (n_pages > 1 and prefetch_depth > 0
+                and getattr(device, "read_us_per_block", 0.0) > 0):
+            # stream pages through the lookahead iterator: the device's
+            # emulated transfer of page p+1 hides under interpreting page p
+            with LookaheadReader(read_page, n_pages,
+                                 depth=prefetch_depth) as reader:
+                result = interpret_program(program, reader, n_pages, page_elems)
+                result.read_seconds = reader.read_seconds
+            return result
         return interpret_program(program, read_page, n_pages, page_elems)
     if tier == CsdTier.JIT:
-        key = (program, n_pages, page_elems)
-        jp = jit_cache.get(key)
-        compile_seconds = 0.0
-        if jp is None:
-            jp = jit_program(program, n_pages, page_elems)
-            jit_cache[key] = jp
-            compile_seconds = jp.compile_seconds
-        # steps 2,3: device DMA of the zone extent into device DRAM
-        raw = device.read_blocks(zone_id, block_off, n_blocks)
-        pages = np.frombuffer(raw.tobytes(), dtype=dtype).reshape(n_pages, page_elems)
+        jp, compile_seconds, hit = cache.get_or_build(
+            ("jit", program, n_pages, page_elems),
+            lambda: jit_program(program, n_pages, page_elems))
+        # steps 2,3: device DMA of the zone extent into device DRAM — a typed
+        # view of the backing buffer, not a host-side copy
+        t_r = time.perf_counter()
+        pages = device.read_extent(zone_id, block_off, n_blocks,
+                                   dtype).reshape(n_pages, page_elems)
+        read_seconds = time.perf_counter() - t_r
         t0 = time.perf_counter()
         value = jp(pages)
         value = tuple(np.asarray(v) for v in value) if isinstance(value, tuple) \
@@ -125,18 +140,27 @@ def execute_extent(
         nbytes = (sum(v.nbytes for v in value) if isinstance(value, tuple)
                   else value.nbytes)
         return OffloadResult(value, nbytes, n_pages,
-                             insns_bound, exec_seconds, compile_seconds)
+                             insns_bound, exec_seconds, compile_seconds,
+                             read_seconds=read_seconds,
+                             cache_hits=int(hit), cache_misses=int(not hit))
     if tier == CsdTier.KERNEL:
         # Pallas tier (TPU target; interpret-mode on CPU); resolve_tier above
         # already routed non-kernelizable programs to the JIT branch
         from repro.kernels.zone_filter import ops as zf_ops
-        raw = device.read_blocks(zone_id, block_off, n_blocks)
-        pages = np.frombuffer(raw.tobytes(), dtype=dtype).reshape(n_pages, page_elems)
+        jp, compile_seconds, hit = cache.get_or_build(
+            ("kernel", program, n_pages, page_elems),
+            lambda: zf_ops.kernel_program(program, n_pages, page_elems))
+        t_r = time.perf_counter()
+        pages = device.read_extent(zone_id, block_off, n_blocks,
+                                   dtype).reshape(n_pages, page_elems)
+        read_seconds = time.perf_counter() - t_r
         t0 = time.perf_counter()
-        value = np.asarray(zf_ops.run_program_kernel(program, pages))
+        value = np.asarray(jp(pages))
         exec_seconds = time.perf_counter() - t0
         return OffloadResult(value, value.nbytes, n_pages,
-                             insns_bound, exec_seconds)
+                             insns_bound, exec_seconds, compile_seconds,
+                             read_seconds=read_seconds,
+                             cache_hits=int(hit), cache_misses=int(not hit))
     raise ValueError(f"unknown tier {tier!r}")
 
 
@@ -156,6 +180,9 @@ class OffloadStats:
     verify_seconds: float = 0.0
     jit_seconds: float = 0.0
     exec_seconds: float = 0.0
+    read_seconds: float = 0.0         # time inside device transfers
+    cache_hits: int = 0               # shared compile-cache hits this offload
+    cache_misses: int = 0
 
     @property
     def movement_saved_bytes(self) -> int:
@@ -165,6 +192,11 @@ class OffloadStats:
     @property
     def reduction_factor(self) -> float:
         return self.bytes_read / max(self.bytes_returned, 1)
+
+    @property
+    def cache_hit_rate(self) -> float:
+        total = self.cache_hits + self.cache_misses
+        return self.cache_hits / total if total else 0.0
 
 
 class CsdTier:
@@ -177,7 +209,10 @@ class NvmCsd:
     """A Zoned Computational Storage Device.
 
     ``pages_per_read`` controls the device-internal streaming granularity
-    (paper default: one 4 KiB block per access).
+    (paper default: one 4 KiB block per access). ``cache`` holds compiled
+    executables for every tier; pass one :func:`repro.core.cache.default_cache`
+    (or any shared :class:`CompiledProgramCache`) to reuse compiles across CSD
+    instances — programs are device-agnostic.
     """
 
     def __init__(
@@ -188,13 +223,16 @@ class NvmCsd:
         pages_per_read: int = 1,
         limits: VerifierLimits = VerifierLimits(),
         max_workers: int = 2,
+        cache: Optional[CompiledProgramCache] = None,
+        prefetch_depth: int = 2,
     ):
         self.device = device
         self.default_tier = default_tier
         self.pages_per_read = int(pages_per_read)
         self.limits = limits
+        self.prefetch_depth = int(prefetch_depth)
         self._result: Optional[OffloadResult] = None
-        self._jit_cache: dict[tuple, JittedProgram] = {}
+        self.cache = cache if cache is not None else CompiledProgramCache()
         self._pool = concurrent.futures.ThreadPoolExecutor(max_workers=max_workers)
         self.history: list[OffloadStats] = []
 
@@ -259,12 +297,15 @@ class NvmCsd:
         result = execute_extent(
             self.device, program, zone_id, block_off, n_blocks,
             tier=tier, pages_per_read=self.pages_per_read,
-            jit_cache=self._jit_cache,
+            cache=self.cache, prefetch_depth=self.prefetch_depth,
         )
         stats.jit_seconds = result.compile_seconds
         stats.insns_executed = result.insns_executed
         stats.exec_seconds = result.exec_seconds
+        stats.read_seconds = result.read_seconds
         stats.bytes_returned = result.bytes_returned
+        stats.cache_hits = result.cache_hits
+        stats.cache_misses = result.cache_misses
         self.bpf_return_data(result)
         self.history.append(stats)
         return stats
@@ -290,10 +331,10 @@ class NvmCsd:
     def oracle(self, program: Program, zone_id: int, *, block_off: int = 0,
                n_blocks: Optional[int] = None):
         """Host-side reference execution (reads the WHOLE extent over the
-        link — the "no CSD" baseline)."""
+        link — the "no CSD" baseline; the link transfer is the point, the
+        typed view just avoids gratuitous extra host copies)."""
         zone = self.device.zone(zone_id)
         if n_blocks is None:
             n_blocks = zone.write_pointer - block_off
-        raw = self.device.read_blocks(zone_id, block_off, n_blocks)
-        return run_oracle(program, np.frombuffer(raw.tobytes(),
-                                                 dtype=np.dtype(program.input_dtype)))
+        return run_oracle(program, self.device.read_extent(
+            zone_id, block_off, n_blocks, np.dtype(program.input_dtype)))

@@ -121,6 +121,9 @@ class OffloadResult:
     insns_executed: int
     exec_seconds: float
     compile_seconds: float = 0.0
+    read_seconds: float = 0.0          # time inside device transfers
+    cache_hits: int = 0                # compiled-executable cache hits
+    cache_misses: int = 0
 
 
 # ---------------------------------------------------------------------------
@@ -208,8 +211,11 @@ def interpret_program(
     insns_executed = 0
     t0 = time.perf_counter()
     for p in range(n_pages):
-        page = read_page(p)
-        x = np.frombuffer(page.tobytes(), dtype=dtype)
+        page = np.asarray(read_page(p))
+        # reinterpret in place (pages are block-aligned, so the typed view is
+        # free); raw uint8 device reads and pre-typed test doubles both work
+        x = page.reshape(-1).view(dtype) if page.dtype != dtype \
+            else page.reshape(-1)
         # explicit bounds check per access (the uBPF interp overhead the
         # paper attributes its slow tier to)
         if x.size != page_elems:
@@ -293,7 +299,11 @@ class JittedProgram:
     program: Program
 
     def __call__(self, pages) -> object:
-        return self.fn(pages)
+        # the executable was compiled under 64-bit mode; the call must run
+        # under it too, or device_put canonicalizes int64/float64 zone pages
+        # down to 32 bits and the input aval check rejects them
+        with jax.experimental.enable_x64():
+            return self.fn(pages)
 
 
 def _stream_mask_jnp(program: Program, x: jnp.ndarray):

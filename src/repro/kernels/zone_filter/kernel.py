@@ -29,19 +29,39 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-__all__ = ["filtered_reduce_pallas", "DEFAULT_BLOCK_PAGES"]
+__all__ = ["filtered_reduce_pallas", "filtered_reduce_pallas_batched",
+           "DEFAULT_BLOCK_PAGES"]
 
 DEFAULT_BLOCK_PAGES = 512   # 512 pages x 4 KiB = 2 MiB block in VMEM
+
+
+def _pick_block_pages(block_pages: int, n_pages: int) -> int:
+    """Largest block size <= ``block_pages`` that tiles ``n_pages`` evenly."""
+    bp = min(block_pages, n_pages)
+    while n_pages % bp:
+        bp -= 1
+    return bp
+
+
+def _acc_dtype(kind: str, dtype) -> jnp.dtype:
+    if kind == "count":
+        return jnp.int32
+    if kind == "sum":
+        return jnp.float32 if dtype.kind == "f" else jnp.int32
+    return dtype
 
 
 def _reduce_kernel(x_ref, out_ref, *, transform, kind, acc_dtype):
     """One grid step: reduce one VMEM block to one partial."""
     x = x_ref[...]
     vals, mask = transform(x)
+    # dtype pinned explicitly: under 64-bit trace mode jnp.sum would promote
+    # int32 partials to int64 and miss the out_ref dtype
     if kind == "count":
-        out_ref[0] = jnp.sum(mask.astype(jnp.int32))
+        out_ref[0] = jnp.sum(mask.astype(jnp.int32), dtype=jnp.int32)
     elif kind == "sum":
-        out_ref[0] = jnp.sum(jnp.where(mask, vals, 0).astype(acc_dtype))
+        out_ref[0] = jnp.sum(jnp.where(mask, vals, 0).astype(acc_dtype),
+                             dtype=acc_dtype)
     elif kind == "min":
         ident = (jnp.finfo if vals.dtype.kind == "f" else jnp.iinfo)(vals.dtype).max
         out_ref[0] = jnp.min(jnp.where(mask, vals, ident))
@@ -70,19 +90,11 @@ def filtered_reduce_pallas(
     ``interpret=False``.
     """
     n_pages, page_elems = pages.shape
-    bp = min(block_pages, n_pages)
-    while n_pages % bp:
-        bp -= 1
+    bp = _pick_block_pages(block_pages, n_pages)
     n_blocks = n_pages // bp
     if transform is None:
         transform = lambda x: (x, jnp.ones(x.shape, bool))
-
-    if kind == "count":
-        acc_dtype = jnp.int32
-    elif kind == "sum":
-        acc_dtype = jnp.float32 if pages.dtype.kind == "f" else jnp.int32
-    else:
-        acc_dtype = pages.dtype
+    acc_dtype = _acc_dtype(kind, pages.dtype)
 
     kernel = functools.partial(_reduce_kernel, transform=transform, kind=kind,
                                acc_dtype=acc_dtype)
@@ -94,13 +106,77 @@ def filtered_reduce_pallas(
         out_shape=jax.ShapeDtypeStruct((n_blocks,), acc_dtype),
         interpret=interpret,
     )(pages)
+    return _combine_partials(partials, kind, acc_dtype)
 
-    # final tree-reduce of the tiny partials vector (fused into the same jit)
+
+def _combine_partials(partials: jnp.ndarray, kind: str, acc_dtype,
+                      axis=None) -> jnp.ndarray:
+    """Final tree-reduce of the tiny partials vector (fused into the same
+    jit as the kernel call)."""
     if kind == "count":
-        return partials.sum(dtype=jnp.int32)
+        return partials.sum(dtype=jnp.int32, axis=axis)
     if kind == "sum":
-        return partials.astype(jnp.float32).sum() if acc_dtype == jnp.float32 \
-            else partials.sum(dtype=jnp.int32)
+        return partials.astype(jnp.float32).sum(axis=axis) \
+            if acc_dtype == jnp.float32 else partials.sum(dtype=jnp.int32, axis=axis)
     if kind == "min":
-        return partials.min()
-    return partials.max()
+        return partials.min(axis=axis)
+    return partials.max(axis=axis)
+
+
+def _batched_reduce_kernel(x_ref, out_ref, *, transform, kind, acc_dtype):
+    """One grid step of the chunk-batched kernel: reduce one VMEM block of
+    one chunk to one partial. The leading block axis is the chunk axis
+    (block size 1), so the body is the single-chunk body on ``x_ref[0]``."""
+    x = x_ref[0]
+    vals, mask = transform(x)
+    if kind == "count":
+        out_ref[0, 0] = jnp.sum(mask.astype(jnp.int32), dtype=jnp.int32)
+    elif kind == "sum":
+        out_ref[0, 0] = jnp.sum(jnp.where(mask, vals, 0).astype(acc_dtype),
+                                dtype=acc_dtype)
+    elif kind == "min":
+        ident = (jnp.finfo if vals.dtype.kind == "f" else jnp.iinfo)(vals.dtype).max
+        out_ref[0, 0] = jnp.min(jnp.where(mask, vals, ident))
+    elif kind == "max":
+        ident = (jnp.finfo if vals.dtype.kind == "f" else jnp.iinfo)(vals.dtype).min
+        out_ref[0, 0] = jnp.max(jnp.where(mask, vals, ident))
+    else:
+        raise ValueError(kind)
+
+
+def filtered_reduce_pallas_batched(
+    pages: jnp.ndarray,
+    *,
+    kind: str = "count",
+    transform: Optional[Callable] = None,
+    block_pages: int = DEFAULT_BLOCK_PAGES,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """Chunk-batched filtered reduction: ``[n_chunks, n_pages, page_elems]``
+    -> one reduced value per chunk (``[n_chunks]``).
+
+    The grid gains a leading dimension over the CHUNK axis — the array
+    scheduler's striped fan-out compiles ONE kernel and executes every
+    same-shape stripe chunk of a device in a single ``pallas_call``, exactly
+    as the vmapped XLA JIT tier already does. Per-chunk accumulation order
+    matches the single-chunk kernel (same ``block_pages`` tiling), so integer
+    and min/max results are bit-identical to running chunks one by one.
+    """
+    n_chunks, n_pages, page_elems = pages.shape
+    bp = _pick_block_pages(block_pages, n_pages)
+    n_blocks = n_pages // bp
+    if transform is None:
+        transform = lambda x: (x, jnp.ones(x.shape, bool))
+    acc_dtype = _acc_dtype(kind, pages.dtype)
+
+    kernel = functools.partial(_batched_reduce_kernel, transform=transform,
+                               kind=kind, acc_dtype=acc_dtype)
+    partials = pl.pallas_call(
+        kernel,
+        grid=(n_chunks, n_blocks),
+        in_specs=[pl.BlockSpec((1, bp, page_elems), lambda c, i: (c, i, 0))],
+        out_specs=pl.BlockSpec((1, 1), lambda c, i: (c, i)),
+        out_shape=jax.ShapeDtypeStruct((n_chunks, n_blocks), acc_dtype),
+        interpret=interpret,
+    )(pages)
+    return _combine_partials(partials, kind, acc_dtype, axis=1)

@@ -3,16 +3,22 @@ from verified offload Programs (repro.core) to the Pallas tier."""
 from __future__ import annotations
 
 import functools
+import time
 
 import jax
+import jax.experimental
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core.programs import CMP_OPS, OpCode, Program
-from repro.kernels.zone_filter.kernel import filtered_reduce_pallas
+from repro.kernels.zone_filter.kernel import (
+    filtered_reduce_pallas,
+    filtered_reduce_pallas_batched,
+)
 
 __all__ = ["zone_filter_count", "zone_reduce", "run_program_kernel",
-           "KERNELIZABLE_TERMINALS", "kernelizable"]
+           "run_program_kernel_batched", "kernel_program",
+           "kernel_program_batched", "KERNELIZABLE_TERMINALS", "kernelizable"]
 
 # RED_SUM over ints is NOT kernelized: TPU has no i64 accumulator and f32
 # accumulation would silently lose precision vs the verifier-promised i64
@@ -95,7 +101,12 @@ def zone_reduce(pages, kind: str = "count", threshold=None, *,
 def run_program_kernel(program: Program, pages: np.ndarray, *,
                        interpret: bool = True):
     """Execute a verified Program on the Pallas tier (the CSD 'hardware
-    backend'). Caller guarantees kernelizable(program)."""
+    backend'). Caller guarantees kernelizable(program).
+
+    Convenience entry that re-traces per call; the CSD hot path goes through
+    :func:`kernel_program` so the compiled executable lands in the shared
+    :class:`~repro.core.cache.CompiledProgramCache`.
+    """
     if not kernelizable(program):
         raise ValueError(f"program {program.name} is not kernelizable")
     kind = _TERM_KIND[program.terminal.op]
@@ -104,3 +115,64 @@ def run_program_kernel(program: Program, pages: np.ndarray, *,
         filtered_reduce_pallas, kind=kind, transform=transform,
         interpret=interpret))
     return fn(jnp.asarray(pages))
+
+
+def run_program_kernel_batched(program: Program, pages: np.ndarray, *,
+                               interpret: bool = True):
+    """Chunk-batched Pallas execution: ``pages[n_chunks, n_pages, page_elems]``
+    -> per-chunk reduced values ``[n_chunks]`` from ONE grid-batched kernel
+    call (leading grid dimension over the chunk axis)."""
+    if not kernelizable(program):
+        raise ValueError(f"program {program.name} is not kernelizable")
+    kind = _TERM_KIND[program.terminal.op]
+    transform = _program_transform(program)
+    fn = jax.jit(functools.partial(
+        filtered_reduce_pallas_batched, kind=kind, transform=transform,
+        interpret=interpret))
+    return fn(jnp.asarray(pages))
+
+
+def _aot_compile(run, spec):
+    """AOT lower+compile with the paper's 'JIT time' measured; traced under
+    64-bit mode like the XLA JIT tier so int64/float64 zone dtypes keep their
+    verified semantics."""
+    t0 = time.perf_counter()
+    with jax.experimental.enable_x64():
+        compiled = jax.jit(run).lower(spec).compile()
+    return compiled, time.perf_counter() - t0
+
+
+def kernel_program(program: Program, n_pages: int, page_elems: int, *,
+                   interpret: bool = True):
+    """Compile a verified Program to a shaped Pallas executable, returned as a
+    :class:`~repro.core.vm.JittedProgram` (so the kernel tier reports compile
+    time and caches exactly like the XLA JIT tier)."""
+    from repro.core.vm import JittedProgram  # local: keep import DAG one-way
+    if not kernelizable(program):
+        raise ValueError(f"program {program.name} is not kernelizable")
+    kind = _TERM_KIND[program.terminal.op]
+    transform = _program_transform(program)
+    run = functools.partial(filtered_reduce_pallas, kind=kind,
+                            transform=transform, interpret=interpret)
+    dtype = np.dtype(program.input_dtype)
+    spec = jax.ShapeDtypeStruct((n_pages, page_elems), dtype)
+    compiled, compile_seconds = _aot_compile(run, spec)
+    return JittedProgram(compiled, compile_seconds, n_pages, page_elems, program)
+
+
+def kernel_program_batched(program: Program, n_chunks: int, n_pages: int,
+                           page_elems: int, *, interpret: bool = True):
+    """Compile the chunk-batched Pallas kernel for a fixed
+    ``[n_chunks, n_pages, page_elems]`` geometry (the scheduler's striped
+    fan-out shape)."""
+    from repro.core.vm import JittedProgram
+    if not kernelizable(program):
+        raise ValueError(f"program {program.name} is not kernelizable")
+    kind = _TERM_KIND[program.terminal.op]
+    transform = _program_transform(program)
+    run = functools.partial(filtered_reduce_pallas_batched, kind=kind,
+                            transform=transform, interpret=interpret)
+    dtype = np.dtype(program.input_dtype)
+    spec = jax.ShapeDtypeStruct((n_chunks, n_pages, page_elems), dtype)
+    compiled, compile_seconds = _aot_compile(run, spec)
+    return JittedProgram(compiled, compile_seconds, n_pages, page_elems, program)

@@ -185,11 +185,11 @@ class ZonedCheckpointStore:
         max_blocks = z.write_pointer if z.write_pointer else z.capacity_blocks
         if z.write_pointer == 0:
             z.write_pointer = z.capacity_blocks  # allow raw scan
-            raw = self.device.read_blocks(0, 0, max_blocks or z.capacity_blocks)
+            raw = self.device.read_blocks_view(0, 0, max_blocks or z.capacity_blocks)
             z.write_pointer = 0
         else:
-            raw = self.device.read_blocks(0, 0, z.write_pointer)
-        buf = raw.tobytes()
+            raw = self.device.read_blocks_view(0, 0, z.write_pointer)
+        buf = raw.tobytes()    # the one copy: bytes for the header parser
         off = 0
         found_blocks = 0
         while off + 40 <= len(buf):
@@ -252,8 +252,8 @@ class ZonedCheckpointStore:
         crc = 0
         for e in manifest["entries"]:
             nblocks = -(-e["bytes"] // self.device.block_bytes)
-            raw = self.device.read_blocks(e["zone"], e["block"], nblocks)
-            raw = raw.tobytes()[: e["bytes"]]
+            raw = self.device.read_blocks_view(e["zone"], e["block"], nblocks)
+            raw = raw.tobytes()[: e["bytes"]]    # one copy: leaf bytes
             crc = zlib.crc32(raw, crc)
             arrays.append(_leaf_from_bytes(raw, e["dtype"], tuple(e["shape"])))
         if crc != manifest["crc32"]:

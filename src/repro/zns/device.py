@@ -79,6 +79,13 @@ class Zone:
     cond: threading.Condition = field(
         default_factory=threading.Condition, repr=False, compare=False
     )
+    # Serializes bandwidth-emulation sleeps at ZONE granularity: transfers
+    # against one zone queue behind each other (one flash die), transfers
+    # against different zones of the same device overlap — the intra-device
+    # parallelism real ZNS hardware exposes (arXiv:2310.19094).
+    io_gate: threading.Lock = field(
+        default_factory=threading.Lock, repr=False, compare=False
+    )
 
     @property
     def remaining_blocks(self) -> int:
@@ -133,12 +140,17 @@ class ZonedDevice:
                  capacity_blocks=self.zone_blocks)
             for z in range(self.num_zones)
         ]
-        # device-level statistics (host-visible, like NVMe log pages)
+        # device-level statistics (host-visible, like NVMe log pages);
+        # bytes_copied/bytes_viewed account host-side data movement: the copy
+        # path duplicates the extent into host memory, the view path hands out
+        # an alias of the backing buffer (zero host copies).
         self.stats = {
             "blocks_read": 0,
             "blocks_appended": 0,
             "zone_resets": 0,
             "zone_finishes": 0,
+            "bytes_copied": 0,
+            "bytes_viewed": 0,
         }
 
     # ------------------------------------------------------------------ zones
@@ -184,24 +196,33 @@ class ZonedDevice:
             pad = nblocks * self.block_bytes - raw.size
             if pad:
                 self._buf[off + raw.size : off + raw.size + pad] = 0
-            if self.append_us_per_block:
-                # bandwidth emulation, QEMU-style: the device is busy (lock
-                # held) for the modeled transfer time
-                time.sleep(nblocks * self.append_us_per_block * 1e-6)
             z.write_pointer += nblocks
             if z.write_pointer == z.capacity_blocks:
                 z.state = ZoneState.FULL
             self.stats["blocks_appended"] += nblocks
-            return start_rel
+        self._emulate_transfer(z, nblocks, self.append_us_per_block)
+        return start_rel
 
     # ------------------------------------------------------------------- read
-    def read_blocks(self, zone_id: int, block_off: int, nblocks: int) -> np.ndarray:
-        """Read ``nblocks`` blocks starting at ``block_off`` (zone-relative).
+    def _emulate_transfer(self, z: Zone, nblocks: int, us_per_block: float) -> None:
+        """Model the device transfer time OUTSIDE the device-wide lock.
 
-        Bounds-checked against the write pointer: reading unwritten blocks is
-        a protocol error (this is the check the offloaded program's
-        ``bpf_read`` hook relies on).
+        The lock only guards metadata and the buffer slice computation; the
+        emulated busy time queues at per-zone granularity (``z.io_gate``), so
+        concurrent transfers against different zones of one device overlap —
+        without this, the array scheduler's fan-out parallelism is partly
+        fake because every member read serializes the whole device.
         """
+        if us_per_block and nblocks:
+            with z.io_gate:
+                time.sleep(nblocks * us_per_block * 1e-6)
+
+    def _read_span(self, zone_id: int, block_off: int, nblocks: int,
+                   *, copy: bool) -> tuple[Zone, np.ndarray]:
+        """Bounds-check a read and return (zone, buffer) under ONE lock
+        acquisition: an owned copy (``copy=True``, atomic w.r.t. writers) or
+        a read-only view of the backing buffer. Byte accounting happens here
+        too, so the hot path never re-takes the lock."""
         with self._lock:
             z = self.zone(zone_id)
             if z.state == ZoneState.OFFLINE:
@@ -212,13 +233,59 @@ class ZonedDevice:
                     f"{z.write_pointer} of zone {zone_id}"
                 )
             off = (z.start_lba + block_off) * self.block_bytes
-            out = np.array(self._buf[off : off + nblocks * self.block_bytes])
-            if self.read_us_per_block:
-                # bandwidth emulation: one device serves one read at a time,
-                # but independent array members read in parallel
-                time.sleep(nblocks * self.read_us_per_block * 1e-6)
+            span = self._buf[off : off + nblocks * self.block_bytes]
             self.stats["blocks_read"] += nblocks
-            return out
+            if copy:
+                span = np.array(span)
+                self.stats["bytes_copied"] += span.nbytes
+            else:
+                span = span.view()
+                span.flags.writeable = False
+                self.stats["bytes_viewed"] += span.nbytes
+            return z, span
+
+    def read_blocks(self, zone_id: int, block_off: int, nblocks: int) -> np.ndarray:
+        """Read ``nblocks`` blocks starting at ``block_off`` (zone-relative).
+
+        Bounds-checked against the write pointer: reading unwritten blocks is
+        a protocol error (this is the check the offloaded program's
+        ``bpf_read`` hook relies on). Returns an owned COPY taken under the
+        device lock (atomic even against a host that resets and rewrites the
+        zone mid-read); the offload hot path uses :meth:`read_blocks_view` /
+        :meth:`read_extent` instead.
+        """
+        z, out = self._read_span(zone_id, block_off, nblocks, copy=True)
+        self._emulate_transfer(z, nblocks, self.read_us_per_block)
+        return out
+
+    def read_blocks_view(self, zone_id: int, block_off: int, nblocks: int) -> np.ndarray:
+        """Zero-copy variant of :meth:`read_blocks`: returns a read-only uint8
+        VIEW of the device's backing buffer.
+
+        The view stays valid as long as the extent is not rewritten (zones are
+        append-only, so written blocks only change across a host-driven
+        ``reset_zone`` — rewriting an extent while a reader holds it is a
+        host protocol bug, exactly as it would be on real hardware).
+        Consumers that feed XLA hand this view straight to the executable —
+        the device-internal DMA the paper models, with at most the one copy
+        XLA itself makes on device_put.
+        """
+        z, view = self._read_span(zone_id, block_off, nblocks, copy=False)
+        self._emulate_transfer(z, nblocks, self.read_us_per_block)
+        return view
+
+    def read_extent(self, zone_id: int, block_off: int, nblocks: int,
+                    dtype: np.dtype | str) -> np.ndarray:
+        """Dtype-typed zero-copy read: :meth:`read_blocks_view` reinterpreted
+        as ``dtype`` elements. Block offsets are always block-aligned in the
+        backing buffer, which is stricter than any supported element
+        alignment, so the reinterpretation never copies."""
+        dtype = np.dtype(dtype)
+        if self.block_bytes % dtype.itemsize:
+            raise ValueError(
+                f"block size {self.block_bytes} not a multiple of "
+                f"{dtype} itemsize {dtype.itemsize}")
+        return self.read_blocks_view(zone_id, block_off, nblocks).view(dtype)
 
     def read_zone(self, zone_id: int) -> np.ndarray:
         """Read every written block of a zone."""

@@ -1,0 +1,352 @@
+"""Offload hot path: zero-copy reads, per-zone bandwidth-emulation locking,
+the shared compile cache, prefetch overlap, the grid-batched Pallas tier, and
+the Kahan float-SUM combiner's cross-width determinism."""
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.array import OffloadScheduler, StripedZoneArray
+from repro.core import (
+    CompiledProgramCache,
+    CsdTier,
+    LookaheadReader,
+    NvmCsd,
+    filter_count,
+    filter_sum,
+    prefetched,
+    run_oracle,
+)
+from repro.core.programs import SUPPORTED_DTYPES, Instruction, OpCode, Program
+from repro.kernels.zone_filter import ops as zf_ops
+from repro.zns import ZonedDevice
+
+BLOCK = 4096
+
+
+def make_device(n_blocks=16, num_zones=2, **kw):
+    return ZonedDevice(num_zones=num_zones, zone_bytes=n_blocks * BLOCK,
+                       block_bytes=BLOCK, **kw)
+
+
+def typed_blocks(dtype, n_blocks, seed=0):
+    rng = np.random.default_rng(seed)
+    n = n_blocks * BLOCK // np.dtype(dtype).itemsize
+    if np.dtype(dtype).kind == "f":
+        return (rng.standard_normal(n) * 1000).astype(dtype)
+    info = np.iinfo(dtype)
+    return rng.integers(max(info.min, -1000), min(info.max, 1000), n,
+                        dtype=dtype)
+
+
+# ------------------------------------------------------------- zero-copy reads
+
+def test_read_blocks_view_is_zero_copy_and_read_only():
+    dev = make_device()
+    data = typed_blocks(np.int32, 4)
+    dev.zone_append(0, data)
+    view = dev.read_blocks_view(0, 0, 4)
+    assert view.base is not None                 # aliases the backing buffer
+    assert not view.flags.writeable
+    with pytest.raises(ValueError):
+        view[0] = 1
+    assert dev.stats["bytes_copied"] == 0
+    assert dev.stats["bytes_viewed"] == 4 * BLOCK
+    # the copy path still copies (and says so)
+    out = dev.read_blocks(0, 0, 4)
+    out[0] = 255                                 # owned, mutable
+    assert dev.stats["bytes_copied"] == 4 * BLOCK
+    assert np.array_equal(np.asarray(view).view(np.int32), data)
+
+
+@pytest.mark.parametrize("dtype", SUPPORTED_DTYPES)
+@pytest.mark.parametrize("block_off,n_blocks", [(0, 8), (1, 4), (3, 5)])
+def test_read_extent_matches_oracle_every_dtype(dtype, block_off, n_blocks):
+    """The typed view must carry the exact bytes the copy path carries —
+    checked against run_oracle over the same extent, including block offsets
+    not aligned to the extent start."""
+    dev = make_device()
+    data = typed_blocks(dtype, 8, seed=3)
+    dev.zone_append(0, data)
+    view = dev.read_extent(0, block_off, n_blocks, dtype)
+    per_block = BLOCK // np.dtype(dtype).itemsize
+    want = data[block_off * per_block:(block_off + n_blocks) * per_block]
+    assert np.array_equal(view, want)
+    program = filter_count(dtype, "gt", 0)
+    assert int(run_oracle(program, view)) == int(run_oracle(program, want))
+    # and the CSD's JIT tier over the same extent agrees with the oracle
+    csd = NvmCsd(dev)
+    got, _ = csd.run_and_fetch(program, 0, block_off=block_off,
+                               n_blocks=n_blocks, tier=CsdTier.JIT)
+    assert int(got) == int(run_oracle(program, want))
+
+
+def test_striped_array_read_extent_round_trip():
+    devs = [make_device(n_blocks=8) for _ in range(3)]
+    arr = StripedZoneArray(devs, stripe_blocks=2)
+    data = typed_blocks(np.int64, 10, seed=7)
+    arr.zone_append(0, data)
+    view = arr.read_extent(0, 1, 7, np.int64)
+    per_block = BLOCK // 8
+    assert np.array_equal(view, data[per_block:8 * per_block])
+    assert not view.flags.writeable
+    # stripe gather is the single counted copy
+    assert arr.stats["bytes_copied"] == 7 * BLOCK
+
+
+def test_jit_offload_makes_zero_host_copies():
+    dev = make_device()
+    dev.zone_append(0, typed_blocks(np.int32, 8))
+    csd = NvmCsd(dev)
+    program = filter_count("int32", "lt", 0)
+    csd.nvm_cmd_bpf_run(program, 0, tier=CsdTier.JIT)
+    assert dev.stats["bytes_copied"] == 0
+    assert dev.stats["bytes_viewed"] == 8 * BLOCK
+
+
+# ------------------------------------------- bandwidth emulation outside lock
+
+def test_reads_of_different_zones_overlap():
+    """Per-zone I/O gating: two threads reading different zones of ONE device
+    must overlap their emulated transfer time; same-zone reads queue."""
+    dev = make_device(n_blocks=8, num_zones=2,
+                      read_us_per_block=20_000)     # 20 ms per block
+    for z in (0, 1):
+        dev.zone_append(z, typed_blocks(np.int32, 5, seed=z))
+
+    def read(zone):
+        dev.read_blocks_view(zone, 0, 5)            # 100 ms emulated
+
+    t0 = time.perf_counter()
+    threads = [threading.Thread(target=read, args=(z,)) for z in (0, 1)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    cross_zone = time.perf_counter() - t0
+    assert cross_zone < 0.17, f"cross-zone reads serialized: {cross_zone:.3f}s"
+
+    t0 = time.perf_counter()
+    threads = [threading.Thread(target=read, args=(0,)) for _ in range(2)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    same_zone = time.perf_counter() - t0
+    assert same_zone >= 0.19, f"same-zone reads overlapped: {same_zone:.3f}s"
+
+
+# ------------------------------------------------------------- compile cache
+
+def test_compile_cache_shared_across_csd_instances():
+    shared = CompiledProgramCache()
+    program = filter_sum("int32", "gt", 0)
+    results, stats = [], []
+    for seed in range(2):
+        dev = make_device()
+        dev.zone_append(0, typed_blocks(np.int32, 8, seed=1))
+        csd = NvmCsd(dev, cache=shared)
+        st = csd.nvm_cmd_bpf_run(program, 0, tier=CsdTier.JIT)
+        stats.append(st)
+        results.append(int(csd.nvm_cmd_bpf_result()))
+    assert results[0] == results[1]
+    assert stats[0].jit_seconds > 0.0 and stats[0].cache_misses == 1
+    assert stats[1].jit_seconds == 0.0 and stats[1].cache_hits == 1
+    cs = shared.stats()
+    assert cs.hits == 1 and cs.misses == 1
+
+
+def test_compile_cache_covers_kernel_tier():
+    shared = CompiledProgramCache()
+    program = filter_count("int32", "ge", 10)
+    sts = []
+    for _ in range(2):
+        dev = make_device()
+        dev.zone_append(0, typed_blocks(np.int32, 8, seed=2))
+        csd = NvmCsd(dev, cache=shared)
+        sts.append(csd.nvm_cmd_bpf_run(program, 0, tier=CsdTier.KERNEL))
+    assert sts[0].cache_misses == 1 and sts[0].jit_seconds > 0.0
+    assert sts[1].cache_hits == 1 and sts[1].jit_seconds == 0.0
+
+
+def test_compile_cache_bounded_with_eviction_stats():
+    cache = CompiledProgramCache(capacity=2)
+
+    class Fake:
+        compile_seconds = 0.01
+
+    for i in range(4):
+        cache.get_or_build(("k", i), Fake)
+    assert len(cache) == 2
+    cs = cache.stats()
+    assert cs.evictions == 2 and cs.misses == 4 and cs.size == 2
+    # LRU: most recent keys survive
+    assert ("k", 3) in cache and ("k", 0) not in cache
+
+
+def test_cache_thread_safe_compile_once():
+    cache = CompiledProgramCache()
+    built = []
+
+    class Slow:
+        compile_seconds = 0.0
+
+        def __init__(self):
+            built.append(1)
+            time.sleep(0.02)
+
+    threads = [threading.Thread(
+        target=lambda: cache.get_or_build("same", Slow)) for _ in range(8)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert len(built) == 1                       # compile-once under races
+    assert cache.stats().hits == 7
+
+
+# ------------------------------------------------------------------ prefetch
+
+def test_prefetched_preserves_order_and_errors():
+    import concurrent.futures
+    items = list(range(10))
+
+    def fetch(i):
+        if i == 7:
+            raise RuntimeError("boom")
+        return i * i
+
+    with concurrent.futures.ThreadPoolExecutor(2) as pool:
+        it = prefetched(items, fetch, executor=pool, depth=2)
+        got = [next(it) for _ in range(7)]
+        assert got == [i * i for i in range(7)]
+        with pytest.raises(RuntimeError, match="boom"):
+            next(it)
+    # degenerate: no executor -> sequential, still ordered
+    assert list(prefetched([1, 2, 3], lambda x: x + 1)) == [2, 3, 4]
+
+
+def test_lookahead_reader_sequential_contract():
+    reads = []
+
+    def fetch(p):
+        reads.append(p)
+        return np.full(4, p)
+
+    with LookaheadReader(fetch, 5, depth=2) as reader:
+        for p in range(5):
+            assert np.array_equal(reader(p), np.full(4, p))
+    assert reads == list(range(5))
+    with LookaheadReader(fetch, 5, depth=2) as reader:
+        reader(0)
+        with pytest.raises(ValueError, match="sequential"):
+            reader(2)
+
+
+def test_interp_lookahead_with_emulated_latency_matches_oracle():
+    dev = make_device(read_us_per_block=50.0)
+    data = typed_blocks(np.int32, 8, seed=9)
+    dev.zone_append(0, data)
+    csd = NvmCsd(dev)
+    program = filter_count("int32", "le", -100)
+    stats = csd.nvm_cmd_bpf_run(program, 0, tier=CsdTier.INTERP)
+    assert int(csd.nvm_cmd_bpf_result()) == int(run_oracle(program, data))
+    assert stats.read_seconds > 0.0              # lookahead path engaged
+
+
+# ------------------------------------------------- grid-batched Pallas tier
+
+KERNEL_PROGRAMS = [
+    filter_count("int32", "gt", 0),
+    Program("int32", (Instruction(OpCode.ABS), Instruction(OpCode.RED_MAX)),
+            name="abs_max"),
+    Program("int32", (Instruction(OpCode.CMP_LT, 500),
+                      Instruction(OpCode.RED_MIN)), name="lt_min"),
+    Program("float32", (Instruction(OpCode.MUL, 2.0),
+                        Instruction(OpCode.CMP_GE, 10.0),
+                        Instruction(OpCode.RED_SUM)), name="scaled_fsum"),
+]
+
+
+@pytest.mark.parametrize("program", KERNEL_PROGRAMS,
+                         ids=[p.name for p in KERNEL_PROGRAMS])
+def test_batched_kernel_matches_per_chunk_kernel(program):
+    """One grid-batched Pallas call == per-chunk kernel calls, bit for bit
+    (same block tiling per chunk)."""
+    dtype = np.dtype(program.input_dtype)
+    pages = np.asarray(typed_blocks(dtype, 24, seed=4)).reshape(
+        6, 4, BLOCK // dtype.itemsize)
+    single = np.stack([np.asarray(zf_ops.run_program_kernel(program, c))
+                       for c in pages])
+    batched = np.asarray(zf_ops.run_program_kernel_batched(program, pages))
+    assert batched.shape == (6,)
+    assert np.array_equal(single, batched)
+
+
+def test_scheduler_kernel_tier_batches_all_full_chunks():
+    """Acceptance: a kernel-tier striped offload executes as ONE grid-batched
+    Pallas call per device group (batched_chunks == n_chunks) and matches the
+    single-device kernel result bit for bit."""
+    data = typed_blocks(np.int32, 40, seed=5)
+    dev = ZonedDevice(num_zones=2, zone_bytes=1024 * 1024, block_bytes=BLOCK)
+    dev.zone_append(0, data)
+    devs = [ZonedDevice(num_zones=4, zone_bytes=256 * 1024, block_bytes=BLOCK)
+            for _ in range(4)]
+    arr = StripedZoneArray(devs, stripe_blocks=4)
+    arr.zone_append(0, data)
+    program = filter_count("int32", "gt", 0)
+    want, want_stats = NvmCsd(dev).run_and_fetch(program, 0,
+                                                 tier=CsdTier.KERNEL)
+    with OffloadScheduler(arr) as sched:
+        got, stats = sched.run_and_fetch(program, 0, tier=CsdTier.KERNEL)
+    assert int(got) == int(want)
+    assert stats.tier == CsdTier.KERNEL
+    assert stats.n_chunks == 10
+    assert stats.batched_chunks == stats.n_chunks
+    assert want_stats.tier == CsdTier.KERNEL
+
+
+# --------------------------------------------- float SUM width determinism
+
+@pytest.mark.parametrize("dtype", ["float32", "float64"])
+def test_float_sum_bitwise_identical_across_widths(dtype):
+    """ROADMAP open item: the Kahan-compensated combiner makes a 4-wide
+    array's float SUM bit-identical to a 1-wide array's over the same
+    logical data (same stripe geometry => same chunk partials)."""
+    data = typed_blocks(dtype, 40, seed=11)
+    program = filter_sum(dtype, "gt", -1e6)      # sums ~everything
+    results = []
+    for width in (1, 2, 4):
+        devs = [ZonedDevice(num_zones=1, zone_bytes=1024 * 1024,
+                            block_bytes=BLOCK) for _ in range(width)]
+        arr = StripedZoneArray(devs, stripe_blocks=4)
+        arr.zone_append(0, data)
+        with OffloadScheduler(arr) as sched:
+            got, _ = sched.run_and_fetch(program, 0, tier=CsdTier.JIT)
+        results.append(np.float64(got))
+    assert results[0] == results[1] == results[2]   # bitwise, no tolerance
+    # and the compensated result is at least as close to the exact sum as a
+    # naive left-to-right partial re-add would be
+    exact = float(np.sum(data[data > -1e6], dtype=np.longdouble))
+    assert abs(float(results[0]) - exact) <= abs(
+        float(np.sum(data[data > -1e6], dtype=np.float64)) - exact) + 1e-6
+
+
+# ------------------------------------------------------------- stats surface
+
+def test_offload_stats_surface_read_cache_and_overlap_fields():
+    data = typed_blocks(np.int32, 40, seed=13)
+    devs = [ZonedDevice(num_zones=1, zone_bytes=1024 * 1024, block_bytes=BLOCK,
+                        read_us_per_block=5.0) for _ in range(4)]
+    arr = StripedZoneArray(devs, stripe_blocks=4)
+    arr.zone_append(0, data)
+    with OffloadScheduler(arr) as sched:
+        s1 = sched.nvm_cmd_bpf_run(filter_count("int32", "gt", 0), 0)
+        s2 = sched.nvm_cmd_bpf_run(filter_count("int32", "gt", 0), 0)
+    assert s1.cache_misses > 0 and s1.jit_seconds > 0.0
+    assert s2.cache_misses == 0 and s2.cache_hits > 0
+    assert s2.jit_seconds == 0.0
+    assert s2.read_seconds > 0.0 and s2.compute_seconds > 0.0
+    assert 0.0 <= s2.overlap_ratio <= 1.0
+    assert s2.cache_hit_rate == 1.0
