@@ -1,6 +1,7 @@
 # CI entry points. `make ci` is what the tier-1 gate runs: the full pytest
 # suite plus a fast benchmark smoke (filter + array scaling + hot-path
-# accounting) that also emits the machine-readable BENCH_hotpath.json.
+# accounting + async completion-ring scaling) that emits the machine-readable
+# BENCH_hotpath.json and BENCH_async.json.
 PYTHONPATH := src:$(PYTHONPATH)
 export PYTHONPATH
 
@@ -10,13 +11,16 @@ test:
 	python -m pytest -x -q
 
 smoke:
-	python benchmarks/run.py --only filter,array,hotpath --json
+	python benchmarks/run.py --only filter,array,hotpath,async --json
 
-# hot-path regression tripwire: the CI-size filter+array suites must fit the
-# wall-clock budget (measured ~7s on 2 cores incl. compiles; ~10x headroom so
-# only a real regression, not scheduler noise, trips it)
+# hot-path regression tripwire: the CI-size suites must fit the wall-clock
+# budget (measured ~10s on 2 cores incl. compiles; ~9x headroom so only a
+# real regression, not scheduler noise, trips it). The async suite asserts
+# its own queue-depth tripwire: depth-8 throughput must exceed depth-1 (and
+# beat 4 thread-blocking workers), and the overlapped checkpoint save must
+# beat the serialized sequence.
 bench-smoke:
-	python benchmarks/run.py --only filter,array --budget 90
+	python benchmarks/run.py --only filter,array,async --budget 90
 
 ci: test smoke
 

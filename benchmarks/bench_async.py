@@ -1,0 +1,235 @@
+"""Async completion-ring scaling: in-flight depth, not thread count.
+
+Two measurements, both asserted (benchmark-as-tripwire):
+
+  1. **Queue-depth scaling** — a fixed pool of 4 submitter threads drives a
+     sliding window of ``depth`` in-flight ``submit_read`` futures over the
+     zones of one emulated device. With the old thread-per-transfer model,
+     throughput saturates at the pool size (4 transfers sleeping = 4 threads
+     burned); with the completion ring, ONE reactor thread retires every
+     in-flight transfer, so throughput keeps scaling with the window —
+     the intra-device queue-depth scaling real ZNS hardware exhibits
+     (arXiv:2010.06243). Asserted: monotonic throughput from depth 1→8, and
+     ring depth-8 beats 4 blocking threads on the same workload.
+
+  2. **Overlapped checkpoint save** — a checkpoint save rides the offload
+     scheduler's submission queues (WRR-arbitrated against a live offload
+     burst) instead of issuing synchronous array appends. Asserted: the
+     overlapped schedule completes faster than running the same offload
+     burst and the same save back-to-back.
+"""
+from __future__ import annotations
+
+import concurrent.futures
+import time
+from collections import deque
+
+import numpy as np
+
+from repro.array import OffloadScheduler, StripedZoneArray
+from repro.core import filter_count
+from repro.train.checkpoint import ZonedCheckpointStore
+from repro.zns import IoReactor, ZonedDevice
+
+RAND_MAX = 2**31 - 1
+BLOCK = 4096
+
+
+# ------------------------------------------------------------- depth scaling
+
+def _drive_window(device, reads, window: int) -> None:
+    """Issue ``reads`` (zone ids) keeping at most ``window`` futures in
+    flight — one tenant's sliding submission window."""
+    futs: deque = deque()
+    for zone in reads:
+        if len(futs) >= window:
+            futs.popleft().result()
+        futs.append(device.submit_read(zone, 0, device.zone(zone).write_pointer))
+    while futs:
+        futs.popleft().result()
+
+
+def run_depth_scaling(
+    *,
+    depths: tuple[int, ...] = (1, 2, 4, 8, 16, 32),
+    zones: int = 32,
+    blocks_per_zone: int = 64,
+    read_us_per_block: float = 8.0,
+    reads_per_zone: int = 2,
+    workers: int = 4,
+) -> list[dict]:
+    """Aggregate read throughput vs in-flight depth at a FIXED worker count.
+
+    Each read moves one whole zone (``blocks_per_zone`` blocks); reads are
+    spread round-robin over the zones so the per-zone virtual-time queues,
+    not a shared lock, are the only serialization.
+    """
+    reactor = IoReactor("bench-async")
+    device = ZonedDevice(num_zones=zones, zone_bytes=blocks_per_zone * BLOCK,
+                         block_bytes=BLOCK,
+                         read_us_per_block=read_us_per_block, reactor=reactor)
+    payload = np.ones(blocks_per_zone * BLOCK // 4, np.int32)
+    for z in range(zones):
+        device.zone_append(z, payload)
+    total_reads = zones * reads_per_zone
+    reads = [i % zones for i in range(total_reads)]
+    total_mib = total_reads * blocks_per_zone * BLOCK / 2**20
+
+    out: list[dict] = []
+    with concurrent.futures.ThreadPoolExecutor(workers) as pool:
+        for depth in depths:
+            active = min(workers, depth)        # depth < pool: idle the rest
+            window = depth // active
+            shards = [reads[t::active] for t in range(active)]
+            reactor.max_in_flight = 0           # per-row, not lifetime, max
+            # best-of-3: on a loaded 2-core CI box a single run's scheduler
+            # noise at adjacent depths can exceed the expected step; the best
+            # run approaches the emulated-time floor, which is what scales
+            seconds = float("inf")
+            for _ in range(3):
+                t0 = time.perf_counter()
+                list(pool.map(lambda s: _drive_window(device, s, window),
+                              shards))
+                seconds = min(seconds, time.perf_counter() - t0)
+            out.append({
+                "depth": depth,
+                "seconds": seconds,
+                "mib_per_s": total_mib / seconds,
+                "workers": active,
+                "max_in_flight": reactor.max_in_flight,
+            })
+
+        # baseline: the pre-ring model — every in-flight transfer blocks a
+        # worker thread, so 4 workers cap in-flight depth at 4 no matter how
+        # deep the submission window is
+        blocking_seconds = float("inf")
+        for _ in range(3):
+            t0 = time.perf_counter()
+            list(pool.map(
+                lambda s: [device.read_blocks_view(z, 0, blocks_per_zone)
+                           for z in s],
+                [reads[t::workers] for t in range(workers)]))
+            blocking_seconds = min(blocking_seconds,
+                                   time.perf_counter() - t0)
+
+    by_depth = {r["depth"]: r["mib_per_s"] for r in out}
+    for lo, hi in ((1, 2), (2, 4), (4, 8)):
+        assert by_depth[hi] > by_depth[lo], (
+            f"queue-depth scaling regressed: depth-{hi} "
+            f"{by_depth[hi]:.1f} MiB/s <= depth-{lo} {by_depth[lo]:.1f} MiB/s")
+    assert by_depth[8] > total_mib / blocking_seconds, (
+        f"ring depth-8 ({by_depth[8]:.1f} MiB/s) did not beat {workers} "
+        f"blocking threads ({total_mib / blocking_seconds:.1f} MiB/s)")
+    out.append({
+        "depth": 0,    # the thread-per-transfer baseline row
+        "seconds": blocking_seconds,
+        "mib_per_s": total_mib / blocking_seconds,
+        "workers": workers,
+        "max_in_flight": workers,
+    })
+    reactor.close()
+    return out
+
+
+# ------------------------------------------------- overlapped checkpoint save
+
+def run_checkpoint_overlap(
+    *,
+    n_devices: int = 4,
+    data_mib: int = 8,
+    ckpt_mib: int = 8,
+    offloads: int = 4,
+    us_per_block: float = 20.0,
+    runs: int = 2,
+) -> dict:
+    """Checkpoint save riding the submission queues vs serialized after the
+    offload burst. The data zone and the payload zones live on the same
+    devices; overlap comes from per-zone virtual-time queues + non-blocking
+    raw-I/O dispatch, not from extra hardware."""
+    data_blocks = data_mib * 2**20 // BLOCK
+    member_zone_bytes = max(data_mib, ckpt_mib) * 2**20 // n_devices * 2
+    devices = [ZonedDevice(num_zones=8, zone_bytes=member_zone_bytes,
+                           block_bytes=BLOCK,
+                           read_us_per_block=us_per_block,
+                           append_us_per_block=us_per_block)
+               for _ in range(n_devices)]
+    array = StripedZoneArray(devices, stripe_blocks=64)
+    rng = np.random.default_rng(0)
+    data = rng.integers(0, RAND_MAX, data_mib * 2**20 // 4, dtype=np.int32)
+    data_zone = 7
+    array.zone_append(data_zone, data)
+    array.finish_zone(data_zone)   # not a checkpoint placement target
+
+    n_leaves = 2
+    tree = {f"w{i}": rng.integers(0, 127, ckpt_mib * 2**20 // 4 // n_leaves,
+                                  dtype=np.int32) for i in range(n_leaves)}
+    program = filter_count("int32", "gt", RAND_MAX // 2)
+    expected = int((data > RAND_MAX // 2).sum())
+
+    with OffloadScheduler(array) as sched:
+        # keep > total saves: GC must never fire here — it resets any written
+        # zone no manifest references, which includes the offload data zone
+        store = ZonedCheckpointStore(device=array, keep=4 * runs,
+                                     scheduler=sched)
+        sched.start()
+        sched.nvm_cmd_bpf_run(program, data_zone)          # warm-up: compile
+        step = 0
+        serial_s, overlap_s = [], []
+        for _ in range(runs):
+            # serialized: offload burst, THEN the save
+            t0 = time.perf_counter()
+            for _ in range(offloads):
+                assert int(sched.run_and_fetch(program, data_zone)[0]) \
+                    == expected
+            store.save(step, tree)
+            serial_s.append(time.perf_counter() - t0)
+            step += 1
+            # overlapped: the save's appends ride the queues WITH the burst
+            # (burst queued first, so even the save's host-side leaf
+            # serialization overlaps the dispatcher's offload execution)
+            t0 = time.perf_counter()
+            cmd_ids = [sched.submit(program, data_zone, _watch=True)
+                       for _ in range(offloads)]
+            ticket = store.save_async(step, tree)
+            comps = [sched.wait(c, timeout=120) for c in cmd_ids]
+            ticket.result(timeout=120)
+            overlap_s.append(time.perf_counter() - t0)
+            step += 1
+            assert all(c.ok and int(c.value) == expected for c in comps)
+
+    serial, overlap = min(serial_s), min(overlap_s)
+    assert overlap < serial, (
+        f"overlapped checkpoint save ({overlap * 1e3:.0f} ms) not faster than "
+        f"serialized ({serial * 1e3:.0f} ms)")
+    return {
+        "serial_seconds": serial,
+        "overlap_seconds": overlap,
+        "speedup": serial / overlap,
+        "offloads": offloads,
+        "ckpt_mib": ckpt_mib,
+    }
+
+
+def main(data_mib: int = 8, runs: int = 2) -> list[str]:
+    rows = []
+    for r in run_depth_scaling():
+        name = f"async_depth{r['depth']}" if r["depth"] else "async_blocking4"
+        rows.append(
+            f"{name},{r['seconds'] * 1e6:.0f},"
+            f"mib_per_s={r['mib_per_s']:.1f};workers={r['workers']};"
+            f"max_in_flight={r['max_in_flight']}"
+        )
+    c = run_checkpoint_overlap(data_mib=data_mib, ckpt_mib=4 * data_mib,
+                               runs=runs)
+    rows.append(
+        f"async_ckpt_overlap,{c['overlap_seconds'] * 1e6:.0f},"
+        f"serial_us={c['serial_seconds'] * 1e6:.0f};"
+        f"speedup={c['speedup']:.2f}x;offloads={c['offloads']};"
+        f"ckpt_mib={c['ckpt_mib']}"
+    )
+    return rows
+
+
+if __name__ == "__main__":
+    for row in main():
+        print(row)

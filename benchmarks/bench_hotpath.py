@@ -1,8 +1,8 @@
 """Offload hot-path accounting: copies, compile-cache reuse, read/compute
-overlap.
+overlap, checkpoint-path copies.
 
 The paper's argument is that moving bytes is the bottleneck, so the emulation
-must account for ITS OWN data movement honestly. Three measurements:
+must account for ITS OWN data movement honestly. Four measurements:
 
   1. **host bytes copied per offload** — the device counts ``bytes_copied``
      (host-side duplications) separately from ``bytes_viewed`` (zero-copy
@@ -14,9 +14,13 @@ must account for ITS OWN data movement honestly. Three measurements:
      :class:`~repro.core.cache.CompiledProgramCache` must reuse executables:
      the second instance's offload reports ``jit_seconds == 0``.
   3. **read/compute overlap** — with member bandwidth emulated, the array
-     scheduler's double-buffered prefetch must hide device transfer time
+     scheduler's ring-prefetched chunk groups must hide device transfer time
      under execution; reported as ``overlap_ratio`` (1.0 = reads fully
      hidden) for 1..4 devices.
+  4. **checkpoint-path copies** — the checkpoint store counts its own host
+     copies: restore must materialize each leaf with EXACTLY one host-side
+     copy (the device bytes are read as zero-copy views) — asserted, so the
+     ``tobytes()`` double-move can never silently come back.
 """
 from __future__ import annotations
 
@@ -136,6 +140,50 @@ def measure_overlap(
     return out
 
 
+def measure_checkpoint_copies(data_mib: int = 8) -> dict:
+    """Host copies on the checkpoint save/restore path, asserted.
+
+    Save stages each leaf once (serialization); restore reads leaf extents as
+    device VIEWS and pays exactly ONE copy per leaf — the materialization
+    that detaches it from the device buffer. A second copy per byte (the old
+    ``tobytes()`` round-trip) trips the assert.
+    """
+    from repro.train.checkpoint import ZonedCheckpointStore
+    from repro.zns import ZonedDevice
+    leaf_bytes = data_mib * 1024 * 1024 // 4
+    tree = {f"w{i}": np.arange(leaf_bytes // 4, dtype=np.int32)
+            for i in range(4)}
+    payload = sum(v.nbytes for v in tree.values())
+    dev = ZonedDevice(num_zones=6, zone_bytes=data_mib * 1024 * 1024,
+                      block_bytes=BLOCK)
+    store = ZonedCheckpointStore(device=dev, keep=2)
+    copied0 = store.stats["bytes_copied"]
+    t0 = time.perf_counter()
+    store.save(0, tree)
+    save_seconds = time.perf_counter() - t0
+    save_copied = store.stats["bytes_copied"] - copied0
+    assert save_copied == payload, (
+        f"save staged {save_copied} bytes for a {payload}-byte checkpoint "
+        f"(expected exactly one serialization copy per leaf)")
+
+    copied0 = store.stats["bytes_copied"]
+    viewed0 = store.stats["bytes_viewed"]
+    t0 = time.perf_counter()
+    got = store.restore(like=tree)
+    restore_seconds = time.perf_counter() - t0
+    restore_copied = store.stats["bytes_copied"] - copied0
+    restore_viewed = store.stats["bytes_viewed"] - viewed0
+    assert restore_copied == payload, (
+        f"restore copied {restore_copied} host bytes for a {payload}-byte "
+        f"checkpoint — the one-copy-per-leaf contract regressed")
+    assert restore_viewed >= payload   # leaf extents arrive as views
+    assert all(np.array_equal(got[k], tree[k]) for k in tree)
+    return {"save_seconds": save_seconds, "restore_seconds": restore_seconds,
+            "payload_bytes": payload, "save_bytes_copied": save_copied,
+            "restore_bytes_copied": restore_copied,
+            "restore_bytes_viewed": restore_viewed}
+
+
 def main(data_mib: int = 8, runs: int = 3) -> list[str]:
     rows = []
     c = measure_copies(data_mib=data_mib, runs=runs)
@@ -158,6 +206,14 @@ def main(data_mib: int = 8, runs: int = 3) -> list[str]:
             f"mib_per_s={r['mib_per_s']:.1f};"
             f"bytes_copied_per_offload={r['bytes_copied_per_offload']:.0f}"
         )
+    ck = measure_checkpoint_copies(data_mib=data_mib)
+    rows.append(
+        f"hotpath_ckpt_copies,{ck['restore_seconds'] * 1e6:.0f},"
+        f"save_us={ck['save_seconds'] * 1e6:.0f};"
+        f"payload_bytes={ck['payload_bytes']};"
+        f"restore_bytes_copied={ck['restore_bytes_copied']};"
+        f"restore_bytes_viewed={ck['restore_bytes_viewed']}"
+    )
     return rows
 
 

@@ -3,9 +3,10 @@
 Prints ``name,us_per_call,derived`` CSV lines. Scaled-down sizes by default
 (CI-friendly on 1 CPU core); pass --full for the paper's exact 256 MiB zone.
 ``--json`` additionally writes ``BENCH_hotpath.json`` (per-suite rows with
-parsed derived metrics) so the perf trajectory is machine-readable across
-PRs; ``--budget SECONDS`` fails the run loudly when it exceeds a wall-clock
-budget — the CI tripwire for hot-path regressions.
+parsed derived metrics) — plus ``BENCH_async.json`` for the async
+completion-ring suite when it ran — so the perf trajectory is
+machine-readable across PRs; ``--budget SECONDS`` fails the run loudly when
+it exceeds a wall-clock budget — the CI tripwire for hot-path regressions.
 """
 from __future__ import annotations
 
@@ -16,6 +17,7 @@ import time
 import traceback
 
 JSON_PATH = "BENCH_hotpath.json"
+ASYNC_JSON_PATH = "BENCH_async.json"
 
 
 def _parse_derived(derived: str) -> dict:
@@ -52,16 +54,16 @@ def main() -> int:
                     help="paper-exact sizes (256 MiB zone, 5 runs)")
     ap.add_argument("--only", default=None,
                     help="comma-separated subset: filter,hotpath,toolchain,"
-                         "pushdown,checkpoint,paged_attn,roofline,array")
+                         "pushdown,checkpoint,paged_attn,roofline,array,async")
     ap.add_argument("--json", action="store_true",
                     help=f"write per-suite results to {JSON_PATH}")
     ap.add_argument("--budget", type=float, default=None,
                     help="fail (exit 1) if the run exceeds this many seconds")
     args = ap.parse_args()
 
-    from benchmarks import (bench_array, bench_checkpoint, bench_filter,
-                            bench_hotpath, bench_paged_attn, bench_pushdown,
-                            bench_toolchain, roofline)
+    from benchmarks import (bench_array, bench_async, bench_checkpoint,
+                            bench_filter, bench_hotpath, bench_paged_attn,
+                            bench_pushdown, bench_toolchain, roofline)
 
     suites = {
         "filter": lambda: bench_filter.main(
@@ -70,6 +72,8 @@ def main() -> int:
             data_mib=64 if args.full else 16, runs=5 if args.full else 3),
         "hotpath": lambda: bench_hotpath.main(
             data_mib=32 if args.full else 8, runs=5 if args.full else 3),
+        "async": lambda: bench_async.main(
+            data_mib=16 if args.full else 8, runs=3 if args.full else 2),
         "toolchain": bench_toolchain.main,
         "pushdown": bench_pushdown.main,
         "checkpoint": bench_checkpoint.main,
@@ -106,6 +110,12 @@ def main() -> int:
         with open(JSON_PATH, "w") as f:
             json.dump(payload, f, indent=2, sort_keys=True)
         print(f"# wrote {JSON_PATH}", file=sys.stderr)
+        if "async" in results:
+            with open(ASYNC_JSON_PATH, "w") as f:
+                json.dump({"suites": {"async": results["async"]},
+                           "full_sizes": bool(args.full)},
+                          f, indent=2, sort_keys=True)
+            print(f"# wrote {ASYNC_JSON_PATH}", file=sys.stderr)
 
     if args.budget is not None and elapsed > args.budget:
         print(f"# BUDGET EXCEEDED: {elapsed:.1f}s > {args.budget:.1f}s "

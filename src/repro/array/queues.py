@@ -13,7 +13,12 @@ device of queue slots.
 
 Commands carry *verified* programs: the scheduler verifies before enqueue, so
 everything past the SQ is admitted work (the same contract the paper's
-verifier gives the single device).
+verifier gives the single device). Since the completion-ring device model,
+a command may instead carry a RAW I/O operation (``io_op`` = ``"read"`` /
+``"append"``): the dispatcher forwards it to the array's submit path without
+blocking and the completion arrives from the reactor — this is how checkpoint
+save/restore rides the same queues (and the same WRR arbitration) as offload
+traffic instead of issuing synchronous array calls.
 """
 from __future__ import annotations
 
@@ -22,9 +27,12 @@ import threading
 import time
 from collections import deque
 from dataclasses import dataclass, field
-from typing import Any, Optional, Sequence
+from typing import Any, Callable, Optional, Sequence
+
+import numpy as np
 
 from repro.core.programs import Program
+from repro.zns.ring import CompletionRing
 
 __all__ = [
     "QueueFullError",
@@ -46,9 +54,18 @@ _cmd_ids = itertools.count(1)
 
 @dataclass
 class OffloadCommand:
-    """One verified offload submission (an NVMe command capsule analogue)."""
+    """One verified submission (an NVMe command capsule analogue).
 
-    program: Program
+    Two shapes share the capsule: a verified offload (``program`` set,
+    ``io_op`` None) executed by the scheduler's fan-out engine, or a raw I/O
+    command (``program`` None, ``io_op`` = ``"read"``/``"append"``) the
+    dispatcher forwards to the device's completion ring without blocking —
+    ``data`` carries the append payload. ``on_complete`` (if set) receives
+    the full :class:`Completion` when the command finishes, whichever thread
+    retires it — the hook checkpoint tickets ride on.
+    """
+
+    program: Optional[Program]
     zone_id: int
     block_off: int
     n_blocks: Optional[int]
@@ -56,6 +73,9 @@ class OffloadCommand:
     tenant: str = "default"
     cmd_id: int = field(default_factory=lambda: next(_cmd_ids))
     insns_verified: int = 0
+    io_op: Optional[str] = None
+    data: Optional[np.ndarray] = None
+    on_complete: Optional[Callable[["Completion"], None]] = None
 
 
 @dataclass
@@ -124,42 +144,17 @@ class SubmissionQueue:
             return len(self._q)
 
 
-class CompletionQueue:
-    """Fixed-depth ring of completions (an NVMe CQ is a fixed-size ring: a
-    host that does not keep up loses the oldest entries, counted in
-    ``dropped``, rather than growing device memory without bound)."""
+class CompletionQueue(CompletionRing):
+    """One tenant's fixed-depth ring of command completions (an NVMe CQ is a
+    fixed-size ring: a host that does not keep up loses the oldest entries,
+    counted in ``dropped``, rather than growing device memory without bound).
+    The overwrite/accounting mechanics are the device layer's
+    :class:`~repro.zns.ring.CompletionRing` — one implementation for both
+    the raw-transfer ring and the per-tenant command CQ."""
 
     def __init__(self, tenant: str, *, depth: int = 256):
-        if depth <= 0:
-            raise ValueError("CQ depth must be positive")
+        super().__init__(depth)
         self.tenant = tenant
-        self.depth = depth
-        self._q: deque[Completion] = deque(maxlen=depth)
-        self._cond = threading.Condition()
-        self.dropped = 0
-
-    def push(self, completion: Completion) -> None:
-        with self._cond:
-            if len(self._q) == self.depth:
-                self.dropped += 1  # ring overwrite of the oldest entry
-            self._q.append(completion)
-            self._cond.notify_all()
-
-    def pop(self, *, timeout: Optional[float] = None) -> Optional[Completion]:
-        with self._cond:
-            if not self._q and timeout is not None:
-                self._cond.wait(timeout=timeout)
-            return self._q.popleft() if self._q else None
-
-    def drain(self) -> list[Completion]:
-        with self._cond:
-            out = list(self._q)
-            self._q.clear()
-            return out
-
-    def __len__(self) -> int:
-        with self._cond:
-            return len(self._q)
 
 
 @dataclass

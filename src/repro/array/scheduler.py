@@ -16,9 +16,10 @@ The :class:`OffloadScheduler` scales that contract to a
      chunks are batched into ONE compiled call per device group: a vmapped
      XLA call on the JIT tier (:func:`repro.core.vm.jit_program_batched`) or
      a grid-batched Pallas call on the kernel tier
-     (:func:`repro.kernels.zone_filter.ops.kernel_program_batched`), with the
-     next group's device read prefetched while the current group executes
-     (:func:`repro.core.prefetch.prefetched`);
+     (:func:`repro.kernels.zone_filter.ops.kernel_program_batched`), with
+     every group's device read submitted to the completion ring up front so
+     later groups' emulated transfers elapse while earlier groups execute
+     (:mod:`repro.zns.ring`);
   4. **scatter-gather** — per-chunk results are re-combined in logical
      stripe order by a program-aware combiner: SUM/COUNT re-add (float SUM
      via Kahan compensated f64 accumulation, so results are identical for
@@ -52,7 +53,6 @@ from repro.core.csd import (
     extent_geometry,
     resolve_tier,
 )
-from repro.core.prefetch import prefetched
 from repro.core.programs import OpCode, Program
 from repro.core.verifier import VerifierLimits, verify_program, verify_zone_access
 from repro.core.vm import _SUM_WIDEN, jit_program_batched
@@ -169,10 +169,6 @@ class OffloadScheduler:
         self.prefetch_depth = int(prefetch_depth)
         self._pool = concurrent.futures.ThreadPoolExecutor(
             max_workers=max_workers or max(array.n_devices, 1))
-        # reads of group k+1 run here while the worker executes group k
-        self._prefetch_pool = concurrent.futures.ThreadPoolExecutor(
-            max_workers=max(array.n_devices, 1),
-            thread_name_prefix="chunk-prefetch")
         # ONE cache for every tier and batch shape; programs are
         # device-agnostic so sharing (also across schedulers/CSDs, via the
         # ``cache`` argument) maximizes compile reuse
@@ -268,32 +264,120 @@ class OffloadScheduler:
         self._wake.set()
         return cmd.cmd_id
 
+    # ------------------------------------------------------------ raw I/O
+    def submit_io(
+        self,
+        io_op: str,
+        zone_id: int,
+        *,
+        block_off: int = 0,
+        n_blocks: Optional[int] = None,
+        data: Optional[np.ndarray] = None,
+        tenant: str = "default",
+        block: bool = False,
+        timeout: Optional[float] = None,
+        on_complete=None,
+        _watch: bool = False,
+    ) -> int:
+        """Enqueue a RAW device I/O command ("read"/"append") on a tenant's
+        SQ; returns the command id. The dispatcher forwards it to the array's
+        completion ring WITHOUT blocking, so raw I/O (checkpoint traffic)
+        overlaps with offload execution while paying its way through the same
+        WRR arbitration as offloads. The SQ depth bounds QUEUED commands
+        (admission, felt when the dispatcher is busy executing offloads); the
+        number of in-flight transfers is bounded by the device's per-zone
+        clocks, not the queue — forwarded commands leave the SQ immediately.
+        """
+        if io_op not in ("read", "append"):
+            raise ValueError(f"unknown io_op {io_op!r}")
+        pair = self._pairs[tenant]
+        if io_op == "read":
+            zone = self.array.zone(zone_id)
+            if n_blocks is None:
+                n_blocks = zone.write_pointer - block_off
+            verify_zone_access(
+                zone_write_pointer=zone.write_pointer, block_off=block_off,
+                n_blocks=n_blocks)
+        elif data is None:
+            raise ValueError("append command requires data")
+        cmd = OffloadCommand(
+            program=None, zone_id=zone_id, block_off=block_off,
+            n_blocks=n_blocks, tier=None, tenant=tenant,
+            io_op=io_op, data=data, on_complete=on_complete,
+        )
+        with self._comp_cond:
+            self._pending.add(cmd.cmd_id)
+            if _watch:
+                self._watched.add(cmd.cmd_id)
+        try:
+            pair.sq.submit(cmd, block=block, timeout=timeout)
+        except BaseException:
+            with self._comp_cond:
+                self._pending.discard(cmd.cmd_id)
+                self._watched.discard(cmd.cmd_id)
+            raise
+        self._wake.set()
+        return cmd.cmd_id
+
     # ----------------------------------------------------------- dispatch
     def dispatch_one(self) -> bool:
-        """Arbitrate and execute ONE queued command. Returns False when every
-        SQ is empty."""
+        """Arbitrate and launch ONE queued command. Returns False when every
+        SQ is empty. Offload commands execute to completion here; raw I/O
+        commands are forwarded to the completion ring and retire later (their
+        completion lands via the reactor, not this thread)."""
         nxt = self._arbiter.next_command()
         if nxt is None:
             return False
         cmd, pair = nxt
+        if cmd.io_op is not None:
+            self._dispatch_io(cmd, pair)
+            return True
         try:
             value, stats = self._execute(cmd)
             comp = Completion(cmd.cmd_id, cmd.tenant, value=value, stats=stats)
             self.history.append(stats)
         except Exception as e:  # surfaced via the CQ, never swallowed
             comp = Completion(cmd.cmd_id, cmd.tenant, error=e)
+        self._finish(cmd, pair, comp)
+        return True
+
+    def _dispatch_io(self, cmd: OffloadCommand, pair: QueuePair) -> None:
+        """Forward a raw I/O command to the array's submit path. Never blocks
+        on the emulated transfer: the ring retires the completion, and the
+        scheduler's completion bookkeeping runs from its done-callback."""
+        try:
+            if cmd.io_op == "append":
+                fut = self.array.submit_append(cmd.zone_id, cmd.data)
+            else:
+                fut = self.array.submit_read(cmd.zone_id, cmd.block_off,
+                                             cmd.n_blocks)
+        except Exception as e:
+            self._finish(cmd, pair, Completion(cmd.cmd_id, cmd.tenant, error=e))
+            return
+        fut.add_done_callback(lambda f: self._finish(
+            cmd, pair,
+            Completion(cmd.cmd_id, cmd.tenant,
+                       value=None if f.error is not None else f.value,
+                       error=f.error)))
+
+    def _finish(self, cmd: OffloadCommand, pair: QueuePair,
+                comp: Completion) -> None:
+        """Completion bookkeeping shared by the synchronous offload path and
+        the ring-retired raw-I/O path (any thread may run this)."""
         with self._comp_cond:
             watched = cmd.cmd_id in self._watched
-        if watched:
-            # a sync caller consumes the payload via wait(); give the CQ a
-            # payload-free record (stats/errors stay observable) so the ring
-            # does not pin up to `depth` dead result buffers
-            pair.cq.push(Completion(cmd.cmd_id, cmd.tenant, value=None,
-                                    stats=comp.stats, error=comp.error))
-        else:
-            pair.cq.push(comp)
+        # when the payload has a dedicated consumer — a sync caller's wait()
+        # (watched) or an on_complete hook — every OTHER completion surface
+        # gets a payload-free record (stats/errors stay observable), so
+        # neither the CQ ring nor the wait() rendezvous pins up to `depth`
+        # dead result buffers (e.g. a queue-routed restore's leaf extents)
+        stripped = Completion(cmd.cmd_id, cmd.tenant, value=None,
+                              stats=comp.stats, error=comp.error) \
+            if (watched or cmd.on_complete is not None) else comp
+        pair.cq.push(stripped)
+        stored = comp if watched else stripped
         with self._comp_cond:
-            self._completions[cmd.cmd_id] = comp
+            self._completions[cmd.cmd_id] = stored
             self._pending.discard(cmd.cmd_id)
             # bound the wait() rendezvous: consumers that read the CQ directly
             # never pop here, so evict oldest-first past the backlog limit —
@@ -304,9 +388,15 @@ class OffloadScheduler:
                 if victim is None:
                     break
                 self._completions.pop(victim)
-            self._result = comp
+            if cmd.program is not None:
+                # raw I/O must not clobber the part-i last-result register
+                self._result = comp
             self._comp_cond.notify_all()
-        return True
+        if cmd.on_complete is not None:
+            try:
+                cmd.on_complete(comp)
+            except Exception:
+                pass  # a consumer hook must not kill the dispatcher/reactor
 
     def drain(self) -> int:
         """Dispatch until every submission queue is empty (synchronous pump)."""
@@ -362,7 +452,6 @@ class OffloadScheduler:
         threads. The scheduler is unusable afterwards; the array is not."""
         self.stop()
         self._pool.shutdown(wait=True)
-        self._prefetch_pool.shutdown(wait=True)
 
     def __enter__(self) -> "OffloadScheduler":
         return self
@@ -519,34 +608,31 @@ class OffloadScheduler:
         call (kernel tier) per chunk group. Full chunks of a device are
         contiguous in member-local space, so one read covers each group.
 
-        Double buffering: the chunks split into up to ``prefetch_depth``
-        equal-size groups and group ``g+1``'s device read runs on the
-        prefetch pool while group ``g`` executes — the read/compute overlap
-        in-storage processing lives on.
+        Read/compute overlap rides the completion ring: EVERY group's device
+        read is submitted up front (the zone's virtual-time queue serializes
+        their emulated transfers in order), so group ``g+1``'s transfer
+        elapses while group ``g`` executes — in-flight depth is the number of
+        groups, with no prefetch pool and no thread parked per read.
         """
         stripe = self.array.stripe_blocks
         dtype = np.dtype(program.input_dtype)
         page_elems, chunk_pages = extent_geometry(
             self.array.block_bytes, dtype, stripe, self.pages_per_read)
         m = len(full)
-        # Split into prefetchable groups, then bucket the group size to a
+        # Split into overlap groups, then bucket the group size to a
         # power of two and zero-pad the tail group, so compiles stay
         # O(#programs x log(max chunks/device)) instead of one per distinct
-        # per-device chunk count; pad-row outputs are discarded below.
+        # per-device chunk count; pad-row outputs are discarded below. Floor
+        # of 2: a batch-of-1 variant would duplicate the plain single-chunk
+        # executable (the degenerate case _run_device_chunks already routes
+        # around) at the cost of an extra XLA compile.
         n_groups = max(min(self.prefetch_depth, m), 1)
-        m_b = 1 << (-(-m // n_groups) - 1).bit_length()
+        m_b = max(1 << (-(-m // n_groups) - 1).bit_length(), 2)
         groups = [full[i:i + m_b] for i in range(0, m, m_b)]
 
-        def fetch(group: list[StripeChunk]):
-            t0 = time.perf_counter()
-            pages = device.read_extent(
-                zone_id, group[0].local_off, len(group) * stripe,
-                dtype).reshape(len(group), chunk_pages, page_elems)
-            return pages, time.perf_counter() - t0
-
         run = _DeviceRun({})
-        fetched = prefetched(groups, fetch, executor=self._prefetch_pool,
-                             depth=max(self.prefetch_depth - 1, 1))
+        futs = [device.submit_read(zone_id, g[0].local_off, len(g) * stripe,
+                                   dtype=dtype) for g in groups]
         if tier == CsdTier.KERNEL:
             from repro.kernels.zone_filter import ops as zf_ops
             key = ("kernel_batched", program, m_b, chunk_pages, page_elems)
@@ -561,8 +647,12 @@ class OffloadScheduler:
         run.hits += int(hit)
         run.misses += int(not hit)
 
-        for group, (pages, read_s) in zip(groups, fetched):
-            run.read_s += read_s
+        for group, fut in zip(groups, futs):
+            pages = fut.result().reshape(len(group), chunk_pages, page_elems)
+            # emulated transfer time of this group (the time the ring hid
+            # under earlier groups' execution; same meaning the thread-backed
+            # fetch wall-clock had)
+            run.read_s += fut.service_seconds
             if len(group) != m_b:
                 pages = np.concatenate(
                     [pages, np.zeros((m_b - len(group), chunk_pages,

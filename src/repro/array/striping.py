@@ -34,9 +34,35 @@ from repro.zns.device import (
     ZoneFullError,
     ZoneState,
     ZoneStateError,
+    block_aligned_dtype,
+    payload_as_uint8,
+)
+from repro.zns.ring import (
+    CompletionBarrier,
+    CompletionRing,
+    IoFuture,
+    in_reactor_thread,
 )
 
 __all__ = ["StripedZoneArray", "LogicalZone", "StripeChunk"]
+
+# Gather-interleave memcpys for reactor-retired member reads run here, NOT on
+# the reactor thread: the reactor must stay a pointer-moving completion pump
+# (a pair of concurrent 64 MiB striped reads would otherwise serialize
+# ~100 MiB of memcpy ahead of every other due completion in the process).
+# Bounded and shared — threads scale with concurrent gathers in progress,
+# never with in-flight transfers, so the ring model's claim stands.
+_gather_pool: Optional[concurrent.futures.ThreadPoolExecutor] = None
+_gather_pool_lock = threading.Lock()
+
+
+def _gather_executor() -> concurrent.futures.ThreadPoolExecutor:
+    global _gather_pool
+    with _gather_pool_lock:
+        if _gather_pool is None:
+            _gather_pool = concurrent.futures.ThreadPoolExecutor(
+                max_workers=4, thread_name_prefix="stripe-gather")
+        return _gather_pool
 
 
 class StripeChunk:
@@ -167,24 +193,15 @@ class StripedZoneArray:
         self.zone_blocks = d0.zone_blocks * self.n_devices
         self.zone_bytes = self.zone_blocks * self.block_bytes
         self._lock = threading.RLock()
-        # member transfers fan out in parallel — the whole point of striping
-        # is aggregate bandwidth; a 1-wide array skips the thread hop. Four
-        # workers per member ~ a per-member queue depth, so CONCURRENT
-        # logical reads (different zones/tenants) keep overlapping instead of
-        # queuing behind one read's emulated transfer time.
-        self._io = concurrent.futures.ThreadPoolExecutor(
-            max_workers=4 * self.n_devices) if self.n_devices > 1 else None
+        # member transfers fan out as in-flight completion-ring descriptors
+        # (repro.zns.ring): an N-member read holds N reactor slots and ZERO
+        # worker threads, and CONCURRENT logical reads (different zones /
+        # tenants) overlap on the members' per-zone virtual clocks instead of
+        # queuing behind a thread-pool's size.
         self.zones = [LogicalZone(self, z) for z in range(self.num_zones)]
         # array-level host-copy accounting (member counters only see their
         # own transfers; the stripe gather-copy happens here)
         self._gather_bytes_copied = 0
-
-    def _fanout(self, tasks: list[Callable[[], object]]) -> list[object]:
-        """Run member-device transfers concurrently (sequentially when the
-        array is 1-wide or there is a single task)."""
-        if self._io is None or len(tasks) <= 1:
-            return [t() for t in tasks]
-        return [f.result() for f in [self._io.submit(t) for t in tasks]]
 
     # -------------------------------------------------------- address math
     def block_location(self, block: int) -> tuple[int, int]:
@@ -227,10 +244,22 @@ class StripedZoneArray:
     def zone_append(self, zone_id: int, data: np.ndarray | bytes) -> int:
         """Striped Zone Append: split ``data`` into stripe chunks and append
         each member's share at that member's write pointer. Returns the
-        logical start block."""
-        raw = np.frombuffer(data, dtype=np.uint8) if isinstance(data, (bytes, bytearray)) \
-            else np.ascontiguousarray(data).view(np.uint8).reshape(-1)
+        logical start block. Synchronous shim over :meth:`submit_append` —
+        member transfers share one wall-clock window (each member's emulated
+        busy time runs on its own zone clock), the call returns at the last
+        member's completion deadline."""
+        return self.submit_append(zone_id, data).result()
+
+    def submit_append(self, zone_id: int, data: np.ndarray | bytes, *,
+                      ring: Optional[CompletionRing] = None) -> IoFuture:
+        """Asynchronous striped Zone Append: member writes land immediately
+        (metadata and bytes, under the array lock), the returned future
+        retires when the LAST member completion does, with the logical start
+        block as its value. ``fut.submitted_block`` carries the logical start
+        synchronously."""
+        raw = payload_as_uint8(data)
         nblocks = -(-raw.size // self.block_bytes)  # ceil
+        member_futs: list[IoFuture] = []
         with self._lock:
             z = self.zone(zone_id)
             if not z.is_writable:
@@ -247,27 +276,45 @@ class StripedZoneArray:
             blocks = padded.reshape(nblocks, self.block_bytes)
             owner = ((np.arange(start, start + nblocks) // self.stripe_blocks)
                      % self.n_devices)
-
-            def append_share(d: int, dev: ZonedDevice) -> None:
+            for d, dev in enumerate(self.devices):
                 share = blocks[owner == d]
                 if share.size == 0:
-                    return
+                    continue
                 # member-local target is contiguous and starts at the member
                 # write pointer (appends only ever go through the array)
-                landed = dev.zone_append(zone_id, share)
+                f = dev.submit_append(zone_id, share)
                 expect = self.block_location(
                     int(np.flatnonzero(owner == d)[0]) + start)[1]
-                if landed != expect:
+                if f.submitted_block != expect:
                     raise ZoneStateError(
                         f"stripe desync on device {d} zone {zone_id}: member "
-                        f"append landed at {landed}, expected {expect}"
+                        f"append landed at {f.submitted_block}, expected {expect}"
                     )
+                member_futs.append(f)
 
-            self._fanout([
-                (lambda d=d, dev=dev: append_share(d, dev))
-                for d, dev in enumerate(self.devices)
-            ])
-            return start
+        agg = IoFuture(op="append", zone_id=zone_id, block_off=start,
+                       nblocks=nblocks,
+                       service_seconds=max(
+                           (f.service_seconds for f in member_futs),
+                           default=0.0),
+                       ring=ring)
+        agg.submitted_block = start
+        self._join_members(agg, member_futs, lambda: start)
+        return agg
+
+    @staticmethod
+    def _join_members(agg: IoFuture, member_futs: list[IoFuture],
+                      finalize: Callable[[], object]) -> None:
+        """Retire ``agg`` with ``finalize()`` (or the first member error) once
+        every member future has retired. Members that completed inline fire
+        their callback inline, so a fully-inline fan-out retires ``agg``
+        before this returns (including the zero-member case)."""
+        barrier = CompletionBarrier(
+            len(member_futs),
+            lambda _vals, err: agg.fail(err) if err is not None
+            else agg.complete(finalize()))
+        for i, f in enumerate(member_futs):
+            f.add_done_callback(lambda f, i=i: barrier.settle(i, f.error))
 
     # --------------------------------------------------------------- read
     def read_blocks(self, zone_id: int, block_off: int, nblocks: int) -> np.ndarray:
@@ -275,15 +322,37 @@ class StripedZoneArray:
         back into logical order.
 
         Only the bounds check and address math run under the array lock;
-        member transfers (and their emulated bandwidth time) fan out outside
-        it, so concurrent array-level reads — different zones, different
-        tenants — overlap instead of queuing behind one logical read. Safe
+        member transfers (and their emulated bandwidth time) ride the
+        completion ring, so concurrent array-level reads — different zones,
+        different tenants — overlap instead of queuing behind one logical
+        read or a worker-pool's thread count. Safe
         against concurrent appends because the logical write pointer only
         covers member blocks whose appends have fully landed (appends update
         it last, under this lock). Resetting + rewriting a zone while a read
         of it is in flight is a host protocol bug (same contract as
         ``ZonedDevice.read_blocks_view``, and as real ZNS hardware).
         """
+        out = self.submit_read(zone_id, block_off, nblocks).result()
+        out = np.asarray(out)
+        out = out.view()               # the gather buffer is private: hand the
+        out.flags.writeable = True     # sync caller an owned, mutable stream
+        return out
+
+    def submit_read(self, zone_id: int, block_off: int, nblocks: int, *,
+                    dtype: Optional[np.dtype | str] = None,
+                    ring: Optional[CompletionRing] = None) -> IoFuture:
+        """Asynchronous striped read: one in-flight member transfer per
+        device, each gathered into logical stripe order as its completion
+        retires; the returned future retires with the last member's, valued
+        as the read-only interleaved extent (``dtype``-typed when given).
+
+        Member transfers ride the completion ring, so a fan-out across N
+        members consumes N in-flight reactor slots and ZERO worker threads —
+        array concurrency is bounded by the emulated devices' zone clocks,
+        not by a pool size.
+        """
+        if dtype is not None:
+            dtype = block_aligned_dtype(self.block_bytes, dtype)
         with self._lock:
             z = self.zone(zone_id)
             if z.state == ZoneState.OFFLINE:
@@ -293,32 +362,62 @@ class StripedZoneArray:
                     f"read [{block_off},{block_off + nblocks}) beyond write pointer "
                     f"{z.write_pointer} of logical zone {zone_id}"
                 )
+        agg = IoFuture(op="read", zone_id=zone_id, block_off=block_off,
+                       nblocks=nblocks, ring=ring)
         out = np.empty((nblocks, self.block_bytes), np.uint8)
+
+        def finalize():
+            with self._lock:
+                self._gather_bytes_copied += out.nbytes
+            flat = out.reshape(-1)
+            if dtype is not None:
+                flat = flat.view(dtype)
+            flat.flags.writeable = False
+            return flat
+
         if nblocks == 0:
-            return out.reshape(-1)
+            agg.complete(finalize())
+            return agg
         bidx = np.arange(block_off, block_off + nblocks)
         chunk = bidx // self.stripe_blocks
         owner = chunk % self.n_devices
         local = (chunk // self.n_devices) * self.stripe_blocks \
             + bidx % self.stripe_blocks
 
-        def read_share(d: int, dev: ZonedDevice) -> None:
+        member_work: list[tuple[IoFuture, np.ndarray]] = []
+        for d, dev in enumerate(self.devices):
             sel = owner == d
             if not sel.any():
-                return
+                continue
             lsel = local[sel]
-            # member view -> interleave copy: ONE host-side copy total
-            # per byte instead of the copy-then-gather double move
-            raw = dev.read_blocks_view(zone_id, int(lsel[0]), int(lsel.size))
-            out[sel] = raw.reshape(-1, self.block_bytes)
+            member_work.append(
+                (dev.submit_read(zone_id, int(lsel[0]), int(lsel.size)), sel))
+        agg.service_seconds = max(f.service_seconds for f, _ in member_work)
+        barrier = CompletionBarrier(
+            len(member_work),
+            lambda _vals, err: agg.fail(err) if err is not None
+            else agg.complete(finalize()))
+        # Member completions firing inline (the non-emulated fast path) copy
+        # right on the submitting thread; completions retired by a reactor
+        # pump hand their copy to the gather pool — detected by thread, not
+        # by submission phase, so the pump NEVER memcpys even when a short
+        # emulated transfer retires mid-registration.
+        def on_member(f: IoFuture, sel: np.ndarray, i: int) -> None:
+            def gather_share() -> None:
+                # member view -> interleave copy at completion time: ONE
+                # host-side copy total per byte (the stripe gather IS the
+                # one unavoidable copy on the array path)
+                if f.error is None:
+                    out[sel] = f.value.reshape(-1, self.block_bytes)
+                barrier.settle(i, f.error)
+            if in_reactor_thread():
+                _gather_executor().submit(gather_share)
+            else:
+                gather_share()
 
-        self._fanout([
-            (lambda d=d, dev=dev: read_share(d, dev))
-            for d, dev in enumerate(self.devices)
-        ])
-        with self._lock:
-            self._gather_bytes_copied += out.nbytes
-        return out.reshape(-1)
+        for i, (f, sel) in enumerate(member_work):
+            f.add_done_callback(lambda f, sel=sel, i=i: on_member(f, sel, i))
+        return agg
 
     def read_blocks_view(self, zone_id: int, block_off: int, nblocks: int) -> np.ndarray:
         """Minimal-copy read for the ``ZonedDevice`` view contract: a striped
@@ -332,11 +431,7 @@ class StripedZoneArray:
                     dtype: np.dtype | str) -> np.ndarray:
         """Dtype-typed minimal-copy read (one gather copy; the reinterpreting
         view is free — block alignment exceeds any element alignment)."""
-        dtype = np.dtype(dtype)
-        if self.block_bytes % dtype.itemsize:
-            raise ValueError(
-                f"block size {self.block_bytes} not a multiple of "
-                f"{dtype} itemsize {dtype.itemsize}")
+        dtype = block_aligned_dtype(self.block_bytes, dtype)
         return self.read_blocks_view(zone_id, block_off, nblocks).view(dtype)
 
     def read_zone(self, zone_id: int) -> np.ndarray:
@@ -370,11 +465,8 @@ class StripedZoneArray:
             dev.flush()
 
     def close(self) -> None:
-        """Release the member-I/O worker threads (the array stays readable
-        via a fresh instance; member devices are not touched)."""
-        if self._io is not None:
-            self._io.shutdown(wait=True)
-            self._io = None
+        """Kept for API compatibility: member I/O rides the shared completion
+        ring now, so the array holds no worker threads to release."""
 
     def __enter__(self) -> "StripedZoneArray":
         return self

@@ -8,7 +8,7 @@
   * :mod:`repro.core.prefetch` — read/compute overlap primitives
 """
 from repro.core.cache import CacheStats, CompiledProgramCache, default_cache
-from repro.core.prefetch import LookaheadReader, prefetched
+from repro.core.prefetch import LookaheadReader, RingReader, prefetched
 from repro.core.programs import (
     Instruction,
     OpCode,
@@ -30,5 +30,5 @@ __all__ = [
     "OffloadResult", "interpret_program", "jit_program", "run_oracle",
     "NvmCsd", "CsdTier", "OffloadStats",
     "CacheStats", "CompiledProgramCache", "default_cache",
-    "LookaheadReader", "prefetched",
+    "LookaheadReader", "RingReader", "prefetched",
 ]

@@ -28,7 +28,7 @@ from typing import Optional
 import numpy as np
 
 from repro.core.cache import CompiledProgramCache
-from repro.core.prefetch import LookaheadReader
+from repro.core.prefetch import RingReader
 from repro.core.programs import OpCode, Program
 from repro.core.verifier import VerifierLimits, verify_program, verify_zone_access
 from repro.core.vm import (
@@ -109,16 +109,21 @@ def execute_extent(
         def read_page(p: int) -> np.ndarray:
             return device.read_blocks_view(
                 zone_id, block_off + p * pages_per_read, pages_per_read)
-        # The lookahead pays a per-page thread handoff, so it only runs when
-        # there is transfer time to hide (the device models bandwidth);
-        # against pure host memory it would be all overhead.
+        # Lookahead only runs when there is transfer time to hide (the device
+        # models bandwidth); against pure host memory it would be all
+        # overhead. Every bandwidth-modelling device is ring-capable, so the
+        # pages stream as in-flight completion futures — no producer thread:
+        # the emulated transfer of pages p+1..p+depth elapses on the zone's
+        # virtual clock while page p is being interpreted.
         if (n_pages > 1 and prefetch_depth > 0
                 and getattr(device, "read_us_per_block", 0.0) > 0):
-            # stream pages through the lookahead iterator: the device's
-            # emulated transfer of page p+1 hides under interpreting page p
-            with LookaheadReader(read_page, n_pages,
-                                 depth=prefetch_depth) as reader:
-                result = interpret_program(program, reader, n_pages, page_elems)
+            with RingReader(
+                    lambda p: device.submit_read(
+                        zone_id, block_off + p * pages_per_read,
+                        pages_per_read),
+                    n_pages, depth=prefetch_depth) as reader:
+                result = interpret_program(program, reader, n_pages,
+                                           page_elems)
                 result.read_seconds = reader.read_seconds
             return result
         return interpret_program(program, read_page, n_pages, page_elems)

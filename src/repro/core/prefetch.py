@@ -2,20 +2,26 @@
 
 In-storage processing wins come from overlapping I/O with compute
 (arXiv:2112.12415): while the execution tier crunches extent chunk ``k``, the
-next chunk's device transfer should already be in flight. Two shapes of that
-pattern live here:
+next chunk's device transfer should already be in flight. Three shapes of
+that pattern live here:
 
+  * :class:`RingReader` — the completion-ring shape and the default: a
+    sequential page reader that keeps ``depth`` ``submit_read`` futures in
+    flight on the device's reactor. No producer thread at all — the emulated
+    transfer of page ``p+depth`` elapses on the zone's virtual clock while
+    the interpreter crunches page ``p``, and ONE reactor thread drives every
+    reader in the process;
   * :func:`prefetched` — a double-buffered iterator over work items whose
-    ``fetch`` runs ``depth`` items ahead on an executor; the array scheduler
-    drives its per-device chunk groups through it (read group ``k+1`` while
-    XLA executes group ``k``);
-  * :class:`LookaheadReader` — a sequential page reader with a background
-    producer thread, wrapping the interp tier's ``bpf_read`` hook so the
-    device's emulated transfer time hides under interpretation.
+    ``fetch`` runs ``depth`` items ahead on an executor (generic: any fetch
+    callable, not just ring-capable devices);
+  * :class:`LookaheadReader` — the pre-ring thread-backed page reader kept
+    for fetch callables that are not ring-backed; each instance burns a
+    producer thread, which is exactly what the ring model removes.
 
-Both only help because the device performs bandwidth-emulation sleeps OUTSIDE
-its metadata lock (see ``ZonedDevice._emulate_transfer``) — against a device
-that serializes every transfer, lookahead buys nothing.
+Overlap only helps because the device models transfer time on per-zone
+virtual-time queues rather than under its metadata lock (see
+``ZonedDevice._claim_slot``) — against a device that serializes every
+transfer, lookahead buys nothing.
 """
 from __future__ import annotations
 
@@ -24,12 +30,70 @@ import queue
 import threading
 import time
 from collections import deque
-from typing import Callable, Iterable, Iterator, Optional, Sequence, TypeVar
+from typing import TYPE_CHECKING, Callable, Iterator, Optional, Sequence, TypeVar
 
-__all__ = ["prefetched", "LookaheadReader"]
+if TYPE_CHECKING:
+    from repro.zns.ring import IoFuture
+
+__all__ = ["RingReader", "prefetched", "LookaheadReader"]
 
 T = TypeVar("T")
 R = TypeVar("R")
+
+
+class RingReader:
+    """Sequential ``read_page(p)`` drop-in backed by completion-ring futures.
+
+    ``submit(p)`` must return an :class:`~repro.zns.ring.IoFuture` (e.g. a
+    bound ``device.submit_read``). The reader eagerly submits the first
+    ``depth`` pages — claiming their slots on the zone's virtual-time queue —
+    and tops the window back up as the consumer advances, so page ``p+depth``
+    is always in flight while page ``p`` is being consumed.
+
+    ``read_seconds`` accumulates the *emulated service time* of consumed
+    pages (``IoFuture.service_seconds``) — the device-transfer time the
+    overlap hides, same meaning the thread-backed reader reported.
+    """
+
+    def __init__(self, submit: Callable[[int], "IoFuture"], n_items: int, *,
+                 depth: int = 2):
+        self._submit = submit
+        self.n_items = int(n_items)
+        self._depth = max(int(depth), 1)
+        self._futs: deque["IoFuture"] = deque()
+        self._submitted = 0
+        self._next = 0
+        self.read_seconds = 0.0
+        for _ in range(min(self._depth, self.n_items)):
+            self._submit_next()
+
+    def _submit_next(self) -> None:
+        self._futs.append(self._submit(self._submitted))
+        self._submitted += 1
+
+    def __call__(self, p: int):
+        if p != self._next:
+            raise ValueError(
+                f"RingReader is sequential: expected page {self._next}, "
+                f"got {p}")
+        self._next += 1
+        fut = self._futs.popleft()
+        if self._submitted < self.n_items:
+            self._submit_next()
+        value = fut.result()
+        self.read_seconds += fut.service_seconds
+        return value
+
+    def close(self) -> None:
+        """Abandoned in-flight futures just retire on the reactor (reads are
+        side-effect-free); nothing to release."""
+        self._futs.clear()
+
+    def __enter__(self) -> "RingReader":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
 
 
 def prefetched(

@@ -57,6 +57,11 @@ class ZoneDataStore:
         self.stride = stride
         self.pages_per_record_unit = max(stride // per_page, 1)
         self.records_written = 0
+        # store-level host-copy accounting: the record staging buffer
+        # (quality column + stride padding) is a host-side copy the device
+        # counters never see — the data-path analogue of the checkpoint
+        # store's serialization accounting
+        self.stats = {"bytes_copied": 0, "bytes_viewed": 0}
 
     def append_records(self, zone_id: int, tokens: np.ndarray,
                        quality: Optional[np.ndarray] = None) -> int:
@@ -76,6 +81,7 @@ class ZoneDataStore:
             pad = np.zeros((n_pad, self.stride), np.int32)
             pad[:, 0] = -1                  # never passes quality >= 0
             flat = np.concatenate([flat, pad.reshape(-1)])
+        self.stats["bytes_copied"] += flat.nbytes   # staging copy to device
         self.device.zone_append(zone_id, flat)
         self.records_written += n
         return n

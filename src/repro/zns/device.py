@@ -16,18 +16,25 @@ June 2020):
 The device is backed either by host memory (default; fast, used by tests and
 the data/KV substrates) or by a memory-mapped file (persistence for the
 checkpoint store). Emulation knobs (``read_us_per_block``/``append_us_per_block``)
-let benchmarks model device bandwidth, as QEMU does for the paper.
+let benchmarks model device bandwidth, as QEMU does for the paper; transfer
+timing runs through per-zone virtual-time queues retired by a shared
+:class:`~repro.zns.ring.IoReactor`, so ``submit_read``/``submit_append`` keep
+arbitrarily many transfers in flight without a thread per transfer (the
+NVMe-style asynchronous interface the paper's device sits behind).
 """
 from __future__ import annotations
 
 import enum
 import threading
 import time
+import weakref
 from dataclasses import dataclass, field
 from pathlib import Path
 from typing import Optional
 
 import numpy as np
+
+from repro.zns.ring import CompletionRing, IoFuture, IoReactor
 
 __all__ = [
     "ZoneState",
@@ -37,7 +44,33 @@ __all__ = [
     "ZoneFullError",
     "ZoneStateError",
     "OutOfBoundsError",
+    "payload_as_uint8",
 ]
+
+
+def payload_as_uint8(data: np.ndarray | bytes | bytearray) -> np.ndarray:
+    """Coerce an append payload to a flat uint8 stream.
+
+    The ONE coercion shared by :meth:`ZonedDevice.zone_append` and the striped
+    array's logical append — a drift between the two would silently corrupt
+    stripe interleaving, so it lives here once.
+    """
+    if isinstance(data, (bytes, bytearray, memoryview)):
+        return np.frombuffer(data, dtype=np.uint8)
+    return np.ascontiguousarray(data).view(np.uint8).reshape(-1)
+
+
+def block_aligned_dtype(block_bytes: int, dtype: np.dtype | str) -> np.dtype:
+    """Validate that ``dtype`` elements tile a block exactly and return the
+    normalized dtype — the ONE alignment rule behind every typed read
+    (sync/async, device/array); a drift between those paths would silently
+    retype extents differently."""
+    dtype = np.dtype(dtype)
+    if block_bytes % dtype.itemsize:
+        raise ValueError(
+            f"block size {block_bytes} not a multiple of "
+            f"{dtype} itemsize {dtype.itemsize}")
+    return dtype
 
 
 class ZNSError(Exception):
@@ -79,12 +112,25 @@ class Zone:
     cond: threading.Condition = field(
         default_factory=threading.Condition, repr=False, compare=False
     )
-    # Serializes bandwidth-emulation sleeps at ZONE granularity: transfers
-    # against one zone queue behind each other (one flash die), transfers
-    # against different zones of the same device overlap — the intra-device
-    # parallelism real ZNS hardware exposes (arXiv:2310.19094).
-    io_gate: threading.Lock = field(
+    # Virtual-time I/O queue at ZONE granularity: transfers against one zone
+    # retire behind each other (one flash die), transfers against different
+    # zones of the same device overlap — the intra-device parallelism real
+    # ZNS hardware exposes (arXiv:2310.19094). ``io_busy_until`` is the
+    # monotonic instant the zone's die goes idle; a new transfer's completion
+    # deadline is max(now, io_busy_until) + service, and the clock advances
+    # to that deadline — the old ``io_gate`` sleep-under-lock semantics with
+    # no thread parked per transfer.
+    io_busy_until: float = 0.0
+    io_lock: threading.Lock = field(
         default_factory=threading.Lock, repr=False, compare=False
+    )
+    # tail of the zone's timed-transfer chain (see IoFuture._prev): keeps
+    # already-due submissions from retiring ahead of an in-flight predecessor.
+    # A WEAK reference — in-flight futures are strongly held by the reactor
+    # heap/submitter, and a retired tail must not pin its payload value until
+    # the zone's next transfer arrives.
+    io_tail: Optional[weakref.ref] = field(
+        default=None, repr=False, compare=False
     )
 
     @property
@@ -113,6 +159,7 @@ class ZonedDevice:
         read_us_per_block: float = 0.0,
         append_us_per_block: float = 0.0,
         max_open_zones: int = 0,  # 0 = unlimited (QEMU default)
+        reactor: Optional[IoReactor] = None,
     ):
         if zone_bytes % block_bytes != 0:
             raise ValueError("zone_bytes must be a multiple of block_bytes")
@@ -123,6 +170,9 @@ class ZonedDevice:
         self.read_us_per_block = float(read_us_per_block)
         self.append_us_per_block = float(append_us_per_block)
         self.max_open_zones = int(max_open_zones)
+        # all devices share one process-wide reactor by default: a single
+        # thread retires every emulated in-flight transfer, like an NVMe CQ
+        self.reactor = reactor if reactor is not None else IoReactor.default()
         self._lock = threading.RLock()
 
         total_bytes = self.num_zones * self.zone_bytes
@@ -167,15 +217,11 @@ class ZonedDevice:
         return [z for z in self.zones if z.state == ZoneState.OPEN]
 
     # ----------------------------------------------------------------- append
-    def zone_append(self, zone_id: int, data: np.ndarray | bytes) -> int:
-        """ZNS 'Zone Append': write ``data`` at the zone's write pointer.
-
-        ``data`` must be a whole number of blocks (the device pads the final
-        block with zeros, as a ZNS host library would). Returns the starting
-        block index *relative to the zone* at which data landed.
-        """
-        raw = np.frombuffer(data, dtype=np.uint8) if isinstance(data, (bytes, bytearray)) \
-            else np.ascontiguousarray(data).view(np.uint8).reshape(-1)
+    def _do_append(self, zone_id: int, data: np.ndarray | bytes) -> tuple[Zone, int, int]:
+        """The append data effect under the device lock: state machine checks,
+        buffer write, write-pointer advance. Returns (zone, start_rel, nblocks).
+        Timing (the emulated transfer) is layered on by the callers."""
+        raw = payload_as_uint8(data)
         nblocks = -(-raw.size // self.block_bytes)  # ceil
         with self._lock:
             z = self.zone(zone_id)
@@ -200,22 +246,86 @@ class ZonedDevice:
             if z.write_pointer == z.capacity_blocks:
                 z.state = ZoneState.FULL
             self.stats["blocks_appended"] += nblocks
-        self._emulate_transfer(z, nblocks, self.append_us_per_block)
+            return z, start_rel, nblocks
+
+    def zone_append(self, zone_id: int, data: np.ndarray | bytes) -> int:
+        """ZNS 'Zone Append': write ``data`` at the zone's write pointer.
+
+        ``data`` must be a whole number of blocks (the device pads the final
+        block with zeros, as a ZNS host library would). Returns the starting
+        block index *relative to the zone* at which data landed. Synchronous:
+        blocks for the emulated transfer time; the async path is
+        :meth:`submit_append`.
+        """
+        with self._lock:
+            z, start_rel, nblocks = self._do_append(zone_id, data)
+            deadline, service = self._claim_slot(
+                z, nblocks, self.append_us_per_block)
+        self._sleep_until(deadline, service)
         return start_rel
 
-    # ------------------------------------------------------------------- read
-    def _emulate_transfer(self, z: Zone, nblocks: int, us_per_block: float) -> None:
-        """Model the device transfer time OUTSIDE the device-wide lock.
+    def submit_append(self, zone_id: int, data: np.ndarray | bytes, *,
+                      ring: Optional[CompletionRing] = None) -> IoFuture:
+        """Asynchronous Zone Append: the write lands immediately (metadata and
+        bytes, under the device lock), the returned future retires at the
+        zone's emulated completion deadline with the landing block as its
+        value — real ZNS Zone Append also reports the assigned LBA only in
+        the completion entry. ``fut.submitted_block`` exposes the landing
+        block synchronously for emulation-internal consumers (stripe desync
+        checks)."""
+        with self._lock:
+            z, start_rel, nblocks = self._do_append(zone_id, data)
+            fut = IoFuture(op="append", zone_id=zone_id, block_off=start_rel,
+                           nblocks=nblocks, ring=ring)
+            fut.submitted_block = start_rel
+            fut._value = start_rel
+            deadline, service = self._claim_slot(
+                z, nblocks, self.append_us_per_block, fut)
+            fut.service_seconds = service
+        return self.reactor.schedule(fut, deadline)
 
-        The lock only guards metadata and the buffer slice computation; the
-        emulated busy time queues at per-zone granularity (``z.io_gate``), so
-        concurrent transfers against different zones of one device overlap —
-        without this, the array scheduler's fan-out parallelism is partly
-        fake because every member read serializes the whole device.
+    # ------------------------------------------------------------------- read
+    def _claim_slot(self, z: Zone, nblocks: int, us_per_block: float,
+                    fut: Optional[IoFuture] = None) -> tuple[float, float]:
+        """Reserve this transfer's slot in the zone's virtual-time queue.
+
+        Returns ``(completion_deadline, service_seconds)``. Same-zone
+        transfers get non-decreasing deadlines (they queue behind one die);
+        different zones advance independent clocks (they overlap). A
+        zero-service transfer on an idle zone costs nothing and completes
+        inline; on a busy zone it still queues behind the in-flight work.
+        When ``fut`` is given it is linked behind the zone's previous timed
+        transfer, so completions of one zone retire strictly in submission
+        order even when the reactor lags wall-clock.
+
+        Callers claim while still holding the device lock (the same critical
+        section that landed the data / snapshotted the read span), so a
+        zone's virtual-time order can never invert against its data order —
+        two racing appends complete in the order their bytes landed.
         """
-        if us_per_block and nblocks:
-            with z.io_gate:
-                time.sleep(nblocks * us_per_block * 1e-6)
+        service = nblocks * us_per_block * 1e-6
+        if not service and not z.io_busy_until:
+            return 0.0, 0.0            # non-emulated fast path: no lock
+        now = time.monotonic()
+        with z.io_lock:
+            start = max(now, z.io_busy_until)
+            deadline = start + service
+            z.io_busy_until = deadline
+            if fut is not None:
+                fut._prev = z.io_tail() if z.io_tail is not None else None
+                z.io_tail = weakref.ref(fut)
+        return deadline, service
+
+    @staticmethod
+    def _sleep_until(deadline: float, service: float) -> None:
+        """Synchronous tail of a transfer: sleep (no lock held) until the
+        claimed completion deadline — the blocking shim over the same clock
+        the reactor-backed submit paths use, so sync and async transfers
+        against one zone serialize with each other."""
+        if service:
+            delay = deadline - time.monotonic()
+            if delay > 0:
+                time.sleep(delay)
 
     def _read_span(self, zone_id: int, block_off: int, nblocks: int,
                    *, copy: bool) -> tuple[Zone, np.ndarray]:
@@ -254,8 +364,11 @@ class ZonedDevice:
         zone mid-read); the offload hot path uses :meth:`read_blocks_view` /
         :meth:`read_extent` instead.
         """
-        z, out = self._read_span(zone_id, block_off, nblocks, copy=True)
-        self._emulate_transfer(z, nblocks, self.read_us_per_block)
+        with self._lock:
+            z, out = self._read_span(zone_id, block_off, nblocks, copy=True)
+            deadline, service = self._claim_slot(
+                z, nblocks, self.read_us_per_block)
+        self._sleep_until(deadline, service)
         return out
 
     def read_blocks_view(self, zone_id: int, block_off: int, nblocks: int) -> np.ndarray:
@@ -270,9 +383,42 @@ class ZonedDevice:
         the device-internal DMA the paper models, with at most the one copy
         XLA itself makes on device_put.
         """
-        z, view = self._read_span(zone_id, block_off, nblocks, copy=False)
-        self._emulate_transfer(z, nblocks, self.read_us_per_block)
+        with self._lock:
+            z, view = self._read_span(zone_id, block_off, nblocks, copy=False)
+            deadline, service = self._claim_slot(
+                z, nblocks, self.read_us_per_block)
+        self._sleep_until(deadline, service)
         return view
+
+    def submit_read(self, zone_id: int, block_off: int, nblocks: int, *,
+                    dtype: Optional[np.dtype | str] = None, copy: bool = False,
+                    ring: Optional[CompletionRing] = None) -> IoFuture:
+        """Asynchronous read: enqueue a transfer descriptor and return an
+        :class:`~repro.zns.ring.IoFuture` that retires at the zone's emulated
+        completion deadline with the extent as its value — a read-only view
+        of the backing buffer by default (``copy=True`` for an owned copy),
+        reinterpreted as ``dtype`` elements when given.
+
+        The bounds check and buffer slice happen at submission under the
+        device lock; zones are append-only, so the snapshot cannot change
+        before the completion retires (rewriting an extent under an in-flight
+        read is a host protocol bug, as on real hardware). One reactor thread
+        drives any number of these in flight — in-flight depth is bounded by
+        the emulated device, not by a thread pool.
+        """
+        if dtype is not None:
+            dtype = block_aligned_dtype(self.block_bytes, dtype)
+        with self._lock:
+            z, span = self._read_span(zone_id, block_off, nblocks, copy=copy)
+            if dtype is not None:
+                span = span.view(dtype)
+            fut = IoFuture(op="read", zone_id=zone_id, block_off=block_off,
+                           nblocks=nblocks, ring=ring)
+            fut._value = span
+            deadline, service = self._claim_slot(
+                z, nblocks, self.read_us_per_block, fut)
+            fut.service_seconds = service
+        return self.reactor.schedule(fut, deadline)
 
     def read_extent(self, zone_id: int, block_off: int, nblocks: int,
                     dtype: np.dtype | str) -> np.ndarray:
@@ -280,11 +426,7 @@ class ZonedDevice:
         as ``dtype`` elements. Block offsets are always block-aligned in the
         backing buffer, which is stricter than any supported element
         alignment, so the reinterpretation never copies."""
-        dtype = np.dtype(dtype)
-        if self.block_bytes % dtype.itemsize:
-            raise ValueError(
-                f"block size {self.block_bytes} not a multiple of "
-                f"{dtype} itemsize {dtype.itemsize}")
+        dtype = block_aligned_dtype(self.block_bytes, dtype)
         return self.read_blocks_view(zone_id, block_off, nblocks).view(dtype)
 
     def read_zone(self, zone_id: int) -> np.ndarray:

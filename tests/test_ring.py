@@ -1,0 +1,494 @@
+"""Async completion-ring device model: reactor ordering, per-zone
+serialization under concurrency, determinism vs the synchronous path, raw
+I/O through the scheduler queues, and async checkpoint save/restore."""
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.array import OffloadScheduler, StripedZoneArray
+from repro.core import CsdTier, NvmCsd, RingReader, filter_count, run_oracle
+from repro.train.checkpoint import ZonedCheckpointStore
+from repro.zns import (
+    CompletionRing,
+    IoFuture,
+    IoReactor,
+    ZonedDevice,
+    payload_as_uint8,
+)
+
+BLOCK = 4096
+
+
+def make_device(n_blocks=64, num_zones=4, **kw):
+    kw.setdefault("reactor", IoReactor("test"))
+    return ZonedDevice(num_zones=num_zones, zone_bytes=n_blocks * BLOCK,
+                       block_bytes=BLOCK, **kw)
+
+
+def typed_blocks(n_blocks, seed=0):
+    rng = np.random.default_rng(seed)
+    return rng.integers(-1000, 1000, n_blocks * BLOCK // 4, dtype=np.int32)
+
+
+# ---------------------------------------------------------------- reactor core
+
+def test_reactor_retires_in_deadline_order():
+    reactor = IoReactor("order")
+    ring = CompletionRing(depth=16)
+    now = time.monotonic()
+    futs = [IoFuture(op="t", zone_id=i, ring=ring) for i in range(4)]
+    for f, delay in zip(futs, (0.04, 0.01, 0.03, 0.02)):
+        f._value = f.zone_id
+        reactor.schedule(f, now + delay)
+    assert all(f.result(timeout=5) is not None or True for f in futs)
+    order = [f.zone_id for f in ring.drain()]
+    assert order == [1, 3, 2, 0]            # deadline order, not submit order
+    reactor.close()
+
+
+def test_zero_service_completes_inline():
+    dev = make_device()
+    dev.zone_append(0, typed_blocks(8))
+    fut = dev.submit_read(0, 0, 8)
+    assert fut.done()                       # no emulation -> retired at submit
+    assert fut.service_seconds == 0.0
+    assert dev.reactor.in_flight == 0
+
+
+def test_future_value_raises_before_done_error_surface():
+    reactor = IoReactor("err")
+    fut = IoFuture(op="t")
+    fut.fail(RuntimeError("boom"))
+    with pytest.raises(RuntimeError, match="boom"):
+        fut.result()
+    assert fut.error is not None
+    reactor.close()
+
+
+def test_completion_ring_bounded_with_drop_accounting():
+    ring = CompletionRing(depth=2)
+    for i in range(5):
+        IoFuture(op="t", zone_id=i, ring=ring).complete(i)
+    assert len(ring) == 2 and ring.dropped == 3 and ring.retired == 5
+    assert [f.zone_id for f in ring.drain()] == [3, 4]
+
+
+# ------------------------------------------------- submit paths vs sync paths
+
+def test_submit_read_bit_identical_to_sync_read():
+    dev = make_device(read_us_per_block=20.0)
+    data = typed_blocks(32, seed=1)
+    dev.zone_append(0, data)
+    sync = dev.read_blocks_view(0, 3, 17)
+    fut = dev.submit_read(0, 3, 17)
+    assert np.array_equal(np.asarray(fut.result(timeout=5)), np.asarray(sync))
+    assert not fut.result().flags.writeable
+    typed = dev.submit_read(0, 3, 17, dtype=np.int32).result(timeout=5)
+    assert np.array_equal(typed, dev.read_extent(0, 3, 17, np.int32))
+
+
+def test_submit_append_lands_like_sync_append():
+    dev = make_device(append_us_per_block=20.0)
+    a, b = typed_blocks(4, seed=2), typed_blocks(4, seed=3)
+    f1 = dev.submit_append(0, a)
+    f2 = dev.submit_append(0, b)
+    assert f1.submitted_block == 0 and f2.submitted_block == 4
+    assert f1.result(timeout=5) == 0 and f2.result(timeout=5) == 4
+    assert np.array_equal(dev.read_extent(0, 4, 4, np.int32), b)
+
+
+def test_payload_as_uint8_coercions_agree():
+    arr = np.arange(16, dtype=np.int64).reshape(4, 4)[:, :2]  # non-contiguous
+    via_bytes = payload_as_uint8(arr.copy().tobytes())
+    via_array = payload_as_uint8(arr)
+    assert via_array.dtype == np.uint8 and via_array.ndim == 1
+    assert np.array_equal(via_bytes, via_array)
+
+
+# ------------------------------------------------------- concurrency stress
+
+def test_per_zone_ordering_and_no_lost_completions_shared_zone():
+    """N concurrent submitters over ONE zone: completions retire in virtual-
+    deadline order (strictly increasing per zone), and none are lost."""
+    dev = make_device(n_blocks=256, read_us_per_block=5.0)
+    dev.zone_append(0, typed_blocks(256, seed=4))
+    ring = CompletionRing(depth=1024)
+    n_threads, per_thread = 8, 16
+    barrier = threading.Barrier(n_threads)
+
+    def submitter(t):
+        barrier.wait()
+        for i in range(per_thread):
+            dev.submit_read(0, (t * per_thread + i) % 128, 1, ring=ring)
+
+    threads = [threading.Thread(target=submitter, args=(t,))
+               for t in range(n_threads)]
+    for th in threads:
+        th.start()
+    for th in threads:
+        th.join()
+    total = n_threads * per_thread
+    assert ring.wait_retired(total, timeout=30)
+    comps = ring.drain()
+    assert len(comps) == total              # no lost completions
+    deadlines = [f.deadline for f in comps]
+    assert deadlines == sorted(deadlines)   # retire order == deadline order
+    assert len(set(deadlines)) == total     # same zone: strictly increasing
+    assert all(f.error is None for f in comps)
+
+
+def test_disjoint_zone_submitters_deterministic_vs_sync():
+    """Concurrent submitters over DISJOINT zones: every completion carries
+    exactly the bytes the synchronous path reads, and per-zone order holds."""
+    dev = make_device(n_blocks=64, num_zones=8, read_us_per_block=2.0)
+    datas = {z: typed_blocks(64, seed=10 + z) for z in range(8)}
+    for z, d in datas.items():
+        dev.zone_append(z, d)
+    ring = CompletionRing(depth=1024)
+    reads_per_zone = 6
+
+    def submitter(z):
+        for i in range(reads_per_zone):
+            dev.submit_read(z, i * 8, 8, dtype=np.int32, ring=ring)
+
+    threads = [threading.Thread(target=submitter, args=(z,)) for z in range(8)]
+    for th in threads:
+        th.start()
+    for th in threads:
+        th.join()
+    assert ring.wait_retired(8 * reads_per_zone, timeout=30)
+    comps = ring.drain()
+    assert len(comps) == 8 * reads_per_zone
+    per_zone_deadlines: dict[int, list] = {}
+    per_block = BLOCK // 4
+    for f in comps:
+        want = datas[f.zone_id][f.block_off * per_block:
+                                (f.block_off + f.nblocks) * per_block]
+        assert np.array_equal(f.value, want)
+        per_zone_deadlines.setdefault(f.zone_id, []).append(f.deadline)
+    for z, ds in per_zone_deadlines.items():
+        assert ds == sorted(ds), f"zone {z} completions out of order"
+
+
+def test_one_reactor_thread_drives_many_in_flight():
+    """The tentpole claim: in-flight depth >> worker threads. 32 reads over
+    32 zones from ONE submitter thread overlap on the reactor."""
+    reactor = IoReactor("depth")
+    dev = ZonedDevice(num_zones=32, zone_bytes=8 * BLOCK, block_bytes=BLOCK,
+                      read_us_per_block=2500.0, reactor=reactor)  # 20ms/zone
+    for z in range(32):
+        dev.zone_append(z, typed_blocks(8, seed=z))
+    t0 = time.perf_counter()
+    futs = [dev.submit_read(z, 0, 8) for z in range(32)]
+    for f in futs:
+        f.result(timeout=30)
+    wall = time.perf_counter() - t0
+    # serialized this is 32 x 20ms = 640ms; in flight it is ~one service time
+    assert wall < 0.32, f"32 in-flight reads took {wall:.3f}s (serialized?)"
+    assert reactor.max_in_flight >= 16
+    reactor.close()
+
+
+# ------------------------------------------------------------- striped array
+
+def test_array_submit_read_matches_sync_striped_read():
+    devs = [make_device(n_blocks=32, read_us_per_block=3.0) for _ in range(3)]
+    arr = StripedZoneArray(devs, stripe_blocks=4)
+    data = typed_blocks(48, seed=20)
+    arr.zone_append(0, data)
+    sync = arr.read_blocks(0, 5, 31)
+    fut = arr.submit_read(0, 5, 31)
+    got = fut.result(timeout=10)
+    assert np.array_equal(np.asarray(got), sync)
+    assert not got.flags.writeable
+    typed = arr.submit_read(0, 0, 48, dtype=np.int32).result(timeout=10)
+    assert np.array_equal(typed, data)
+
+
+def test_array_submit_append_equivalent_to_sync():
+    data = typed_blocks(24, seed=21)
+    sync_devs = [make_device(n_blocks=16) for _ in range(2)]
+    async_devs = [make_device(n_blocks=16, append_us_per_block=10.0)
+                  for _ in range(2)]
+    sync_arr = StripedZoneArray(sync_devs, stripe_blocks=4)
+    async_arr = StripedZoneArray(async_devs, stripe_blocks=4)
+    assert sync_arr.zone_append(0, data) == 0
+    fut = async_arr.submit_append(0, data)
+    assert fut.submitted_block == 0
+    assert fut.result(timeout=10) == 0
+    assert np.array_equal(sync_arr.read_extent(0, 0, 24, np.int32),
+                          async_arr.read_extent(0, 0, 24, np.int32))
+
+
+def test_array_submit_read_surfaces_member_failure():
+    devs = [make_device(n_blocks=16, read_us_per_block=5.0) for _ in range(2)]
+    arr = StripedZoneArray(devs, stripe_blocks=4)
+    arr.zone_append(0, typed_blocks(16, seed=22))
+    arr.set_offline(0, device=1)
+    with pytest.raises(Exception):
+        arr.submit_read(0, 0, 16).result(timeout=10)
+
+
+# ------------------------------------------------------------- RingReader
+
+def test_ring_reader_sequential_contract_and_service_accounting():
+    dev = make_device(read_us_per_block=50.0)
+    data = typed_blocks(8, seed=23)
+    dev.zone_append(0, data)
+    with RingReader(lambda p: dev.submit_read(0, p, 1), 8, depth=3) as reader:
+        for p in range(8):
+            got = np.asarray(reader(p)).view(np.int32)
+            assert np.array_equal(got, data[p * 1024:(p + 1) * 1024])
+    assert reader.read_seconds > 0.0
+    with RingReader(lambda p: dev.submit_read(0, p, 1), 8, depth=2) as reader:
+        reader(0)
+        with pytest.raises(ValueError, match="sequential"):
+            reader(2)
+
+
+# ----------------------------------------------- offload tiers, bit-identical
+
+@pytest.mark.parametrize("tier", [CsdTier.INTERP, CsdTier.JIT, CsdTier.KERNEL])
+def test_offload_tiers_bit_identical_with_and_without_emulation(tier):
+    """Acceptance: reactor-backed reads feed every tier the exact bytes the
+    synchronous (non-emulated, inline-completion) path feeds it."""
+    data = typed_blocks(16, seed=30)
+    program = filter_count("int32", "gt", 0)
+    results = []
+    for read_us in (0.0, 25.0):    # inline completions vs reactor-timed
+        dev = make_device(n_blocks=16, read_us_per_block=read_us)
+        dev.zone_append(0, data)
+        csd = NvmCsd(dev)
+        got, stats = csd.run_and_fetch(program, 0, tier=tier)
+        results.append(int(got))
+    assert results[0] == results[1] == int(run_oracle(program, data))
+
+
+def test_scheduler_offload_identical_across_emulation_modes():
+    data = typed_blocks(64, seed=31)
+    program = filter_count("int32", "le", 100)
+    results = []
+    for read_us in (0.0, 5.0):
+        devs = [make_device(n_blocks=32, read_us_per_block=read_us)
+                for _ in range(4)]
+        arr = StripedZoneArray(devs, stripe_blocks=4)
+        arr.zone_append(0, data)
+        with OffloadScheduler(arr) as sched:
+            got, stats = sched.run_and_fetch(program, 0)
+        results.append(int(got))
+    assert results[0] == results[1] == int(run_oracle(program, data))
+
+
+# ------------------------------------------------------- raw I/O on the queues
+
+def test_scheduler_raw_io_commands_roundtrip():
+    devs = [make_device(n_blocks=32, read_us_per_block=10.0,
+                        append_us_per_block=10.0) for _ in range(2)]
+    arr = StripedZoneArray(devs, stripe_blocks=4)
+    data = typed_blocks(16, seed=40)
+    with OffloadScheduler(arr) as sched:
+        sched.register_tenant("ckpt", weight=2)
+        cid_a = sched.submit_io("append", 1, data=data, tenant="ckpt",
+                                _watch=True)
+        sched.drain()
+        comp_a = sched.wait(cid_a, timeout=10)
+        assert comp_a.ok and comp_a.value == 0
+        cid_r = sched.submit_io("read", 1, n_blocks=16, tenant="ckpt",
+                                _watch=True)
+        sched.drain()
+        comp_r = sched.wait(cid_r, timeout=10)
+        assert comp_r.ok
+        assert np.array_equal(np.asarray(comp_r.value).view(np.int32), data)
+        # raw I/O never clobbers the part-i last-offload-result register
+        with pytest.raises(RuntimeError):
+            sched.nvm_cmd_bpf_result()
+
+
+def test_raw_io_completion_lands_on_tenant_cq():
+    devs = [make_device(n_blocks=32, append_us_per_block=10.0)
+            for _ in range(2)]
+    arr = StripedZoneArray(devs, stripe_blocks=4)
+    with OffloadScheduler(arr) as sched:
+        sched.register_tenant("ckpt")
+        fired = threading.Event()
+        sched.submit_io("append", 1, data=typed_blocks(8), tenant="ckpt",
+                        on_complete=lambda c: fired.set())
+        sched.drain()
+        assert fired.wait(timeout=10)
+        comp = sched.queue_pair("ckpt").cq.pop(timeout=10)
+        assert comp is not None and comp.ok
+
+
+# --------------------------------------------------------- async checkpoints
+
+def _tree(seed=0):
+    rng = np.random.default_rng(seed)
+    return {
+        "w": rng.standard_normal((64, 64)).astype(np.float32),
+        "b": rng.integers(-5, 5, 256, dtype=np.int64),
+    }
+
+
+def _like():
+    return {"w": np.zeros((64, 64), np.float32), "b": np.zeros(256, np.int64)}
+
+
+def test_checkpoint_save_async_commit_and_restore_async():
+    dev = make_device(n_blocks=64, num_zones=6,
+                      read_us_per_block=5.0, append_us_per_block=5.0)
+    store = ZonedCheckpointStore(device=dev, keep=2)
+    tree = _tree(1)
+    ticket = store.save_async(7, tree)
+    manifest = ticket.result(timeout=30)
+    assert manifest["step"] == 7 and store.latest_step() == 7
+    # every payload entry's block came from its append COMPLETION
+    assert all(e["block"] >= 0 for e in manifest["entries"])
+    got = store.restore_async(like=_like()).result(timeout=30)
+    assert np.array_equal(got["w"], tree["w"])
+    assert np.array_equal(got["b"], tree["b"])
+
+
+def test_checkpoint_async_matches_sync_restore_bitwise():
+    dev = make_device(n_blocks=64, num_zones=6, append_us_per_block=2.0)
+    store = ZonedCheckpointStore(device=dev, keep=2)
+    tree = _tree(2)
+    store.save(1, tree)
+    sync = store.restore(like=_like())
+    async_ = store.restore_async(like=_like()).result(timeout=30)
+    assert np.array_equal(np.asarray(sync["w"]), np.asarray(async_["w"]))
+    assert np.array_equal(np.asarray(sync["b"]), np.asarray(async_["b"]))
+
+
+def test_striped_checkpoint_restore_bit_identical_async_vs_sync(tmp_path):
+    """Acceptance: striped restore through the ring == synchronous restore,
+    and an async-saved striped checkpoint survives a reopen."""
+    store = ZonedCheckpointStore.striped(tmp_path, num_devices=3,
+                                         num_zones=6,
+                                         member_zone_bytes=64 * BLOCK,
+                                         stripe_blocks=4)
+    tree = _tree(3)
+    store.save_async(5, tree).result(timeout=30)
+    store.flush()
+    sync = store.restore(like=_like())
+    async_ = store.restore_async(like=_like()).result(timeout=30)
+    assert np.array_equal(np.asarray(sync["w"]), np.asarray(async_["w"]))
+    assert np.array_equal(np.asarray(sync["b"]), np.asarray(async_["b"]))
+    reopened = ZonedCheckpointStore.striped(tmp_path)
+    got = reopened.restore(like=_like())
+    assert np.array_equal(np.asarray(got["w"]), tree["w"])
+
+
+def test_checkpoint_rides_scheduler_queues_overlapping_offloads():
+    """Checkpoint save through the submission queues while offload traffic
+    flows: both finish, results correct, checkpoint tenant CQ sees entries."""
+    devs = [make_device(n_blocks=128, num_zones=8, read_us_per_block=3.0,
+                        append_us_per_block=3.0) for _ in range(2)]
+    arr = StripedZoneArray(devs, stripe_blocks=4)
+    data = typed_blocks(64, seed=50)
+    arr.zone_append(7, data)
+    arr.finish_zone(7)
+    program = filter_count("int32", "gt", 0)
+    expected = int(run_oracle(program, data))
+    with OffloadScheduler(arr) as sched:
+        store = ZonedCheckpointStore(device=arr, keep=4, scheduler=sched)
+        sched.start()
+        tree = _tree(4)
+        cids = [sched.submit(program, 7, _watch=True) for _ in range(3)]
+        ticket = store.save_async(9, tree)
+        comps = [sched.wait(c, timeout=60) for c in cids]
+        manifest = ticket.result(timeout=60)
+        assert all(c.ok and int(c.value) == expected for c in comps)
+        assert manifest["step"] == 9
+        got = store.restore(like=_like())
+        assert np.array_equal(got["w"], tree["w"])
+        assert len(sched.queue_pair("checkpoint").cq) > 0
+
+
+def test_checkpoint_manifest_zone_full_fails_ticket_not_hangs():
+    """A full manifest zone must surface as a ticket error (the sync path
+    used to raise ZoneFullError loudly) — never a forever-pending ticket."""
+    dev = make_device(n_blocks=4, num_zones=4)   # tiny 4-block manifest zone
+    store = ZonedCheckpointStore(device=dev, keep=99)
+    tree = {"x": np.arange(64, dtype=np.int64)}
+    with pytest.raises(Exception):
+        for step in range(64):   # manifest zone fills after a few commits
+            store.save(step, tree)
+    assert store.latest_step() is not None       # earlier saves committed
+
+
+def test_checkpoint_more_leaves_than_queue_depth_backpressures():
+    """Scheduler-routed save with leaves >> SQ depth must throttle via
+    backpressure, not raise QueueFullError mid-save."""
+    devs = [make_device(n_blocks=256, num_zones=8, append_us_per_block=1.0)
+            for _ in range(2)]
+    arr = StripedZoneArray(devs, stripe_blocks=4)
+    with OffloadScheduler(arr, queue_depth=8) as sched:
+        store = ZonedCheckpointStore(device=arr, keep=2, scheduler=sched)
+        tree = {f"leaf{i}": np.arange(1024, dtype=np.int32)
+                for i in range(40)}              # 40 appends vs depth-8 SQ
+        manifest = store.save_async(1, tree).result(timeout=60)
+        assert len(manifest["entries"]) == 40
+        got = store.restore(like=tree)
+        assert all(np.array_equal(got[k], tree[k]) for k in tree)
+
+
+def test_gc_never_resets_zones_of_inflight_save():
+    """gc() must skip zones an uncommitted save_async is writing — their
+    manifest does not exist yet, so the live-set alone cannot protect them."""
+    dev = make_device(n_blocks=64, num_zones=3,      # manifest + 2 payload
+                      append_us_per_block=200.0)     # keep the save in flight
+    store = ZonedCheckpointStore(device=dev, keep=1)
+    small = {"x": np.arange(1024, dtype=np.int32)}   # 1 block per save
+    store.save(0, small)
+    store.save(1, small)                             # manifests now > keep
+    ticket = store.save_async(2, small)              # ~13ms of append left
+    assert not ticket.done()
+    store.gc()                                       # must skip save-2's zone
+    manifest = ticket.result(timeout=30)
+    got = store.restore(step=2, like=small)
+    assert np.array_equal(got["x"], small["x"])
+
+
+def test_overlapping_saves_commit_in_step_order():
+    """A small step-2 save can retire before a fat step-1 save; latest_step()
+    must still be the newest STEP, live and across reopen."""
+    dev = make_device(n_blocks=256, num_zones=6, append_us_per_block=50.0)
+    store = ZonedCheckpointStore(device=dev, keep=4)
+    big = {"x": np.arange(64 * 1024, dtype=np.int32)}    # 64 blocks: ~3.2ms
+    small = {"x": np.arange(1024, dtype=np.int32)}       # 1 block: ~50us
+    t1 = store.save_async(1, big)
+    t2 = store.save_async(2, small)
+    m2 = t2.result(timeout=30)
+    m1 = t1.result(timeout=30)
+    assert m1["step"] == 1 and m2["step"] == 2
+    assert store.steps() == [1, 2]                   # step order, not landing
+    assert store.latest_step() == 2
+    got = store.restore(like=small)                  # step=None -> newest step
+    assert np.array_equal(got["x"], small["x"])
+
+
+def test_checkpoint_copy_accounting():
+    dev = make_device(n_blocks=64, num_zones=4)
+    store = ZonedCheckpointStore(device=dev, keep=2)
+    tree = _tree(5)
+    payload = sum(np.asarray(v).nbytes for v in tree.values())
+    c0 = store.stats["bytes_copied"]
+    store.save(0, tree)
+    assert store.stats["bytes_copied"] - c0 == payload  # serialization only
+    c0 = store.stats["bytes_copied"]
+    v0 = store.stats["bytes_viewed"]
+    store.restore(like=_like())
+    assert store.stats["bytes_copied"] - c0 == payload  # ONE copy per leaf
+    assert store.stats["bytes_viewed"] - v0 >= payload  # extents arrive as views
+
+
+def test_datastore_copy_accounting():
+    from repro.data.pipeline import ZoneDataStore
+    dev = make_device(n_blocks=64)
+    store = ZoneDataStore(dev, seq_len=31)
+    toks = np.arange(8 * 31, dtype=np.int32).reshape(8, 31)
+    store.append_records(0, toks)
+    assert store.stats["bytes_copied"] > 0          # staging copy counted
+    assert store.stats["bytes_copied"] % dev.block_bytes == 0
