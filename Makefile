@@ -1,26 +1,36 @@
-# CI entry points. `make ci` is what the tier-1 gate runs: the full pytest
-# suite plus a fast benchmark smoke (filter + array scaling + hot-path
-# accounting + async completion-ring scaling) that emits the machine-readable
-# BENCH_hotpath.json and BENCH_async.json.
+# CI entry points. `make ci` is what the tier-1 gate runs: the FAST pytest
+# tier — everything not marked `slow` (the emulation-sleep and big-model
+# compile tests; run the complete suite with `make test-all`) — plus a fast
+# benchmark smoke (filter + array scaling + hot-path accounting + async
+# completion-ring scaling + redundancy/degraded reads) that emits the
+# machine-readable BENCH_hotpath.json, BENCH_async.json and
+# BENCH_degraded.json.
 PYTHONPATH := src:$(PYTHONPATH)
 export PYTHONPATH
 
-.PHONY: test smoke ci bench bench-smoke
+.PHONY: test test-all smoke ci bench bench-smoke
 
 test:
+	python -m pytest -x -q -m "not slow"
+
+# the complete suite, slow tier included (coverage identical to the
+# pre-split `make test`)
+test-all:
 	python -m pytest -x -q
 
 smoke:
-	python benchmarks/run.py --only filter,array,hotpath,async --json
+	python benchmarks/run.py --only filter,array,hotpath,async,degraded --json
 
 # hot-path regression tripwire: the CI-size suites must fit the wall-clock
 # budget (measured ~10s on 2 cores incl. compiles; ~9x headroom so only a
 # real regression, not scheduler noise, trips it). The async suite asserts
 # its own queue-depth tripwire: depth-8 throughput must exceed depth-1 (and
 # beat 4 thread-blocking workers), and the overlapped checkpoint save must
-# beat the serialized sequence.
+# beat the serialized sequence. The degraded suite asserts the redundancy
+# tripwires: healthy raid1 reads beat the raid0 floor, degraded reads hold
+# the single-device floor, degraded offload results stay bit-identical.
 bench-smoke:
-	python benchmarks/run.py --only filter,array,async --budget 90
+	python benchmarks/run.py --only filter,array,async,degraded --budget 120
 
 ci: test smoke
 

@@ -1,0 +1,144 @@
+"""Redundancy modes: degraded-read floor and mirror read-bandwidth multiplier.
+
+A fixed logical dataset is laid out on arrays with emulated member read
+bandwidth (``read_us_per_block``, QEMU-style) under each redundancy mode,
+then a member zone is killed and the SAME reads/offloads run degraded:
+
+  * raw striped reads — raid1 redirects every chunk to the surviving mirror
+    partner (so degraded throughput ~= the single-device floor), xor
+    reconstructs the dead member's chunks from the surviving row members in
+    parallel (so degraded throughput can exceed the floor);
+  * verified offloads through the :class:`~repro.array.OffloadScheduler` —
+    degraded fan-out redirects/reconstructs per chunk and the result must be
+    BIT-IDENTICAL to the healthy array's (asserted, the acceptance
+    criterion), with the served-degraded chunk count in
+    ``ArrayOffloadStats.degraded_reads``.
+
+Asserted tripwires (loud in CI):
+  * healthy raid1 reads beat the raid0 single-device floor at equal data
+    size (mirror round-robin is a read-bandwidth multiplier);
+  * degraded reads stay >= the single-device floor (with a small emulation
+    tolerance for raid1, whose survivor IS a single device);
+  * every offload, healthy or degraded, returns the exact expected count.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.array import OffloadScheduler, StripedZoneArray
+from repro.core import filter_count
+from repro.core.cache import CompiledProgramCache
+from repro.zns import ZonedDevice
+
+RAND_MAX = 2**31 - 1
+
+
+def _build(mode: str, n_devices: int, data: np.ndarray, data_bytes: int,
+           read_us_per_block: float) -> StripedZoneArray:
+    devices = [
+        ZonedDevice(num_zones=1, zone_bytes=data_bytes, block_bytes=4096,
+                    read_us_per_block=read_us_per_block)
+        for _ in range(n_devices)
+    ]
+    array = StripedZoneArray(devices, stripe_blocks=64, redundancy=mode)
+    array.zone_append(0, data)
+    return array
+
+
+def run_degraded(
+    *,
+    data_mib: int = 8,
+    read_us_per_block: float = 20.0,
+    runs: int = 3,
+    seed: int = 0,
+) -> list[dict]:
+    # 20 us/block means the emulated transfer time (~41 ms for an 8 MiB
+    # single-device scan) dominates host-side scheduling noise, so the
+    # ratio asserts below stay stable even on a loaded 2-core CI box
+    data_bytes = data_mib * 1024 * 1024
+    n_blocks = data_bytes // 4096
+    rng = np.random.default_rng(seed)
+    data = rng.integers(0, RAND_MAX, data_bytes // 4, dtype=np.int32)
+    expected = int((data > RAND_MAX // 2).sum())
+    program = filter_count("int32", "gt", RAND_MAX // 2)
+    cache = CompiledProgramCache()   # share compiles across every config
+
+    # (row name, redundancy, member count, member device to kill or None)
+    configs = [
+        ("raid0_1dev", "raid0", 1, None),
+        ("raid0_2dev", "raid0", 2, None),
+        ("raid1_2dev_healthy", "raid1", 2, None),
+        ("raid1_2dev_degraded", "raid1", 2, 1),
+        ("xor_3dev_healthy", "xor", 3, None),
+        ("xor_3dev_degraded", "xor", 3, 1),
+    ]
+    out: list[dict] = []
+    for name, mode, n, kill in configs:
+        array = _build(mode, n, data, data_bytes, read_us_per_block)
+        with OffloadScheduler(array, cache=cache) as sched:
+            sched.nvm_cmd_bpf_run(program, 0)        # healthy warm-up: pays JIT
+            if kill is not None:
+                array.set_offline(0, device=kill)
+            # raw striped read (reconstruction path for degraded configs)
+            read_times = []
+            for _ in range(runs):
+                t = time.perf_counter()
+                got = array.read_blocks(0, 0, n_blocks)
+                read_times.append(time.perf_counter() - t)
+            assert int((got.view(np.int32) > RAND_MAX // 2).sum()) == expected, \
+                f"{name}: raw read bytes differ from the healthy data"
+            # verified offload (bit-identical acceptance criterion)
+            off_times = []
+            for _ in range(runs):
+                t = time.perf_counter()
+                stats = sched.nvm_cmd_bpf_run(program, 0)
+                off_times.append(time.perf_counter() - t)
+            assert int(sched.nvm_cmd_bpf_result()) == expected, \
+                f"{name}: degraded offload result differs"
+            if kill is not None:
+                assert stats.degraded_reads > 0, \
+                    f"{name}: degraded fan-out not counted"
+        out.append({
+            "name": name,
+            "read_seconds": float(np.min(read_times)),
+            "read_mib_per_s": data_mib / float(np.min(read_times)),
+            "offload_seconds": float(np.min(off_times)),
+            "offload_mib_per_s": data_mib / float(np.min(off_times)),
+            "degraded_chunks": stats.degraded_reads,
+        })
+
+    by = {r["name"]: r for r in out}
+    floor = by["raid0_1dev"]
+    # mirror round-robin is a READ multiplier at equal data size (the
+    # offload-path timing is noisier — JAX dispatch overhead — so the
+    # asserted tripwires are the raw-read throughputs; offloads are
+    # asserted for bit-identity and degraded accounting above)
+    assert by["raid1_2dev_healthy"]["read_mib_per_s"] > \
+        1.15 * floor["read_mib_per_s"], \
+        "healthy raid1 reads do not beat the raid0 floor"
+    # degraded reads hold the single-device floor (raid1's survivor IS a
+    # single device, so allow a reconstruction-overhead tolerance)
+    assert by["raid1_2dev_degraded"]["read_mib_per_s"] >= \
+        0.8 * floor["read_mib_per_s"], "raid1 degraded reads below the floor"
+    assert by["xor_3dev_degraded"]["read_mib_per_s"] >= \
+        0.8 * floor["read_mib_per_s"], "xor degraded reads below the floor"
+    return out
+
+
+def main(data_mib: int = 8, runs: int = 3) -> list[str]:
+    rows = []
+    for r in run_degraded(data_mib=data_mib, runs=runs):
+        rows.append(
+            f"degraded_{r['name']},{r['offload_seconds'] * 1e6:.0f},"
+            f"offload_mib_per_s={r['offload_mib_per_s']:.1f};"
+            f"read_mib_per_s={r['read_mib_per_s']:.1f};"
+            f"degraded_chunks={r['degraded_chunks']}"
+        )
+    return rows
+
+
+if __name__ == "__main__":
+    for row in main():
+        print(row)

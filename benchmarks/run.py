@@ -4,7 +4,8 @@ Prints ``name,us_per_call,derived`` CSV lines. Scaled-down sizes by default
 (CI-friendly on 1 CPU core); pass --full for the paper's exact 256 MiB zone.
 ``--json`` additionally writes ``BENCH_hotpath.json`` (per-suite rows with
 parsed derived metrics) — plus ``BENCH_async.json`` for the async
-completion-ring suite when it ran — so the perf trajectory is
+completion-ring suite and ``BENCH_degraded.json`` for the redundancy /
+degraded-read suite when they ran — so the perf trajectory is
 machine-readable across PRs; ``--budget SECONDS`` fails the run loudly when
 it exceeds a wall-clock budget — the CI tripwire for hot-path regressions.
 """
@@ -18,6 +19,7 @@ import traceback
 
 JSON_PATH = "BENCH_hotpath.json"
 ASYNC_JSON_PATH = "BENCH_async.json"
+DEGRADED_JSON_PATH = "BENCH_degraded.json"
 
 
 def _parse_derived(derived: str) -> dict:
@@ -54,7 +56,8 @@ def main() -> int:
                     help="paper-exact sizes (256 MiB zone, 5 runs)")
     ap.add_argument("--only", default=None,
                     help="comma-separated subset: filter,hotpath,toolchain,"
-                         "pushdown,checkpoint,paged_attn,roofline,array,async")
+                         "pushdown,checkpoint,paged_attn,roofline,array,"
+                         "async,degraded")
     ap.add_argument("--json", action="store_true",
                     help=f"write per-suite results to {JSON_PATH}")
     ap.add_argument("--budget", type=float, default=None,
@@ -62,8 +65,9 @@ def main() -> int:
     args = ap.parse_args()
 
     from benchmarks import (bench_array, bench_async, bench_checkpoint,
-                            bench_filter, bench_hotpath, bench_paged_attn,
-                            bench_pushdown, bench_toolchain, roofline)
+                            bench_degraded, bench_filter, bench_hotpath,
+                            bench_paged_attn, bench_pushdown, bench_toolchain,
+                            roofline)
 
     suites = {
         "filter": lambda: bench_filter.main(
@@ -74,6 +78,8 @@ def main() -> int:
             data_mib=32 if args.full else 8, runs=5 if args.full else 3),
         "async": lambda: bench_async.main(
             data_mib=16 if args.full else 8, runs=3 if args.full else 2),
+        "degraded": lambda: bench_degraded.main(
+            data_mib=16 if args.full else 8, runs=5 if args.full else 3),
         "toolchain": bench_toolchain.main,
         "pushdown": bench_pushdown.main,
         "checkpoint": bench_checkpoint.main,
@@ -110,12 +116,15 @@ def main() -> int:
         with open(JSON_PATH, "w") as f:
             json.dump(payload, f, indent=2, sort_keys=True)
         print(f"# wrote {JSON_PATH}", file=sys.stderr)
-        if "async" in results:
-            with open(ASYNC_JSON_PATH, "w") as f:
-                json.dump({"suites": {"async": results["async"]},
+        for suite, path in (("async", ASYNC_JSON_PATH),
+                            ("degraded", DEGRADED_JSON_PATH)):
+            if suite not in results:
+                continue
+            with open(path, "w") as f:
+                json.dump({"suites": {suite: results[suite]},
                            "full_sizes": bool(args.full)},
                           f, indent=2, sort_keys=True)
-            print(f"# wrote {ASYNC_JSON_PATH}", file=sys.stderr)
+            print(f"# wrote {path}", file=sys.stderr)
 
     if args.budget is not None and elapsed > args.budget:
         print(f"# BUDGET EXCEEDED: {elapsed:.1f}s > {args.budget:.1f}s "

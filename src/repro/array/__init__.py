@@ -4,8 +4,11 @@ The subsystem the paper defers as future work — asynchronous execution and
 multi-device operation — built on the repo's single-device primitives:
 
   * :mod:`repro.array.striping`  — ``StripedZoneArray``: N ZNS devices as one
-    logical zoned address space (RAID-0 zone striping; ``ZonedDevice``
-    drop-in, so every existing consumer works unchanged);
+    logical zoned address space (``ZonedDevice`` drop-in, so every existing
+    consumer works unchanged) with selectable redundancy: ``raid0``
+    striping, ``raid1`` mirror pairs (round-robin reads, survivor redirect),
+    or ``xor`` rotating parity (degraded reads reconstruct a dead member's
+    chunks from the surviving row members on the completion ring);
   * :mod:`repro.array.queues`    — NVMe-style per-tenant submission/completion
     queue pairs with depth limits, backpressure, and weighted round-robin
     arbitration;
@@ -13,7 +16,12 @@ multi-device operation — built on the repo's single-device primitives:
     per device (vmapped-JIT batching for same-shape shards), scatter-gather
     with a program-aware combiner, aggregated ``ArrayOffloadStats``.
 """
-from repro.array.striping import LogicalZone, StripeChunk, StripedZoneArray
+from repro.array.striping import (
+    LogicalZone,
+    REDUNDANCY_MODES,
+    StripeChunk,
+    StripedZoneArray,
+)
 from repro.array.queues import (
     Completion,
     CompletionQueue,
@@ -30,7 +38,7 @@ from repro.array.scheduler import (
 )
 
 __all__ = [
-    "StripedZoneArray", "LogicalZone", "StripeChunk",
+    "StripedZoneArray", "LogicalZone", "StripeChunk", "REDUNDANCY_MODES",
     "SubmissionQueue", "CompletionQueue", "QueuePair", "QueueFullError",
     "OffloadCommand", "Completion", "WeightedRoundRobinArbiter",
     "OffloadScheduler", "ArrayOffloadStats", "ArrayOffloadError",

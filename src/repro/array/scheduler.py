@@ -65,7 +65,7 @@ from repro.array.queues import (
     WeightedRoundRobinArbiter,
 )
 from repro.array.striping import StripeChunk, StripedZoneArray
-from repro.zns.device import ZNSError
+from repro.zns.device import ZNSError, block_aligned_dtype
 
 __all__ = ["OffloadScheduler", "ArrayOffloadStats", "ArrayOffloadError"]
 
@@ -87,6 +87,10 @@ class ArrayOffloadStats(OffloadStats):
     n_devices: int = 1
     n_chunks: int = 1
     batched_chunks: int = 0        # chunks executed via a batched compiled call
+    # chunks served without their preferred member: raid1 mirror redirects
+    # plus xor reconstructions (degraded offloads stay bit-identical; this
+    # counter is how an operator notices the array is running degraded)
+    degraded_reads: int = 0
     compute_seconds: float = 0.0   # time inside compiled/interp execution only
     # sum over device workers of max(read + compute - worker wall, 0): the
     # transfer time each worker hid WITHIN its own device via the prefetcher.
@@ -115,6 +119,7 @@ class _DeviceRun:
     compile_s: float = 0.0
     insns: int = 0
     batched: int = 0
+    degraded: int = 0
     read_s: float = 0.0
     compute_s: float = 0.0
     overlap_s: float = 0.0
@@ -126,11 +131,44 @@ class _DeviceRun:
         self.compile_s += other.compile_s
         self.insns += other.insns
         self.batched += other.batched
+        self.degraded += other.degraded
         self.read_s += other.read_s
         self.compute_s += other.compute_s
         self.overlap_s += other.overlap_s
         self.hits += other.hits
         self.misses += other.misses
+
+
+class _ExtentSource:
+    """Duck-typed ``ZonedDevice`` over ONE reconstructed stripe chunk held in
+    host memory, addressed at the chunk's member-local offsets.
+
+    Degraded xor chunks have no single member to read from; the array's
+    reconstruction (:meth:`StripedZoneArray.submit_read`) produces the bytes,
+    and this adapter lets :func:`repro.core.csd.execute_extent` run the SAME
+    interp/jit/kernel tier code over them — so a degraded offload is
+    bit-identical to the healthy one by construction, not by a parallel
+    re-implementation of the tiers.
+    """
+
+    read_us_per_block = 0.0   # no emulation: the survivor reads already paid
+
+    def __init__(self, block_bytes: int, base_block: int, flat: np.ndarray):
+        self.block_bytes = block_bytes
+        self._base = base_block
+        self._flat = flat          # uint8, len == n_blocks * block_bytes
+
+    def read_blocks_view(self, zone_id: int, block_off: int,
+                         n_blocks: int) -> np.ndarray:
+        lo = (block_off - self._base) * self.block_bytes
+        view = self._flat[lo: lo + n_blocks * self.block_bytes].view()
+        view.flags.writeable = False
+        return view
+
+    def read_extent(self, zone_id: int, block_off: int, n_blocks: int,
+                    dtype) -> np.ndarray:
+        dtype = block_aligned_dtype(self.block_bytes, dtype)
+        return self.read_blocks_view(zone_id, block_off, n_blocks).view(dtype)
 
 
 class OffloadScheduler:
@@ -502,7 +540,16 @@ class OffloadScheduler:
     def _execute(self, cmd: OffloadCommand) -> tuple[object, ArrayOffloadStats]:
         program, zone_id, tier = cmd.program, cmd.zone_id, cmd.tier
         array = self.array
-        chunks = array.chunks(zone_id, cmd.block_off, cmd.n_blocks)
+        try:
+            chunks = array.chunks(zone_id, cmd.block_off, cmd.n_blocks)
+        except ZNSError as e:
+            # the PR 2 clean-error contract: callers handle degraded/failed
+            # offloads via ArrayOffloadError, whether one raid0 member died
+            # or the loss defeated the redundancy mode entirely
+            raise ArrayOffloadError(
+                f"offload failed: zone {zone_id} unrecoverable under "
+                f"{array.redundancy}: {e}"
+            ) from e
         by_dev: dict[int, list[StripeChunk]] = {}
         for c in chunks:
             by_dev.setdefault(c.device, []).append(c)
@@ -549,7 +596,7 @@ class OffloadScheduler:
             overlap_seconds=agg.overlap_s,
             cache_hits=agg.hits, cache_misses=agg.misses,
             n_devices=len(by_dev), n_chunks=len(chunks),
-            batched_chunks=agg.batched,
+            batched_chunks=agg.batched, degraded_reads=agg.degraded,
         )
         return value, stats
 
@@ -558,46 +605,127 @@ class OffloadScheduler:
         program: Program, tier: str,
     ) -> "_DeviceRun":
         """Execute one device's chunks (full-size chunks batched into one
-        compiled call on the jit/kernel tiers, the rest singly)."""
+        compiled call on the jit/kernel tiers, the rest singly).
+
+        Chunks the array planner flagged ``reconstruct`` (their xor data
+        member is OFFLINE) never touch this device directly — they rebuild
+        through the array's degraded read and execute over the host buffer.
+        A chunk whose member dies BETWEEN planning and execution retries the
+        same way on redundant arrays; raid0 keeps the PR 2 clean-error
+        contract and degrades the whole offload."""
         device = self.array.devices[dev_idx]
         stripe = self.array.stripe_blocks
-        full = [c for c in dev_chunks if c.n_blocks == stripe]
-        rest = [c for c in dev_chunks if c.n_blocks != stripe]
+        direct = [c for c in dev_chunks if not c.reconstruct]
+        recon = [c for c in dev_chunks if c.reconstruct]
+        full = [c for c in direct if c.n_blocks == stripe]
+        rest = [c for c in direct if c.n_blocks != stripe]
         run = _DeviceRun({})
         t_worker = time.perf_counter()
-        try:
-            # a single full chunk reuses the plain single-chunk executable
-            # (shared with NvmCsd) instead of compiling a batch-of-1 variant
-            if tier in (CsdTier.JIT, CsdTier.KERNEL) and len(full) > 1:
-                run.merge(self._run_batched(device, zone_id, full, program, tier))
+        # a single full chunk reuses the plain single-chunk executable
+        # (shared with NvmCsd) instead of compiling a batch-of-1 variant
+        if tier in (CsdTier.JIT, CsdTier.KERNEL) and len(full) > 1:
+            try:
+                run.merge(self._run_batched(device, zone_id, full, program,
+                                            tier))
                 run.insns += program.n_insns * len(full) * (
                     stripe // self.pages_per_read)
                 run.batched += len(full)
-            else:
+                run.degraded += sum(1 for c in full if c.degraded)
+            except ZNSError as e:
+                # the member died mid-batch: re-run its chunks one by one so
+                # each can fall back to degraded reconstruction
+                self._member_failed(dev_idx, zone_id, e)
                 rest = full + rest
-            for c in rest:
+        else:
+            rest = full + rest
+        # every reconstruct chunk's survivor reads go in flight UP FRONT,
+        # BEFORE the direct-chunk execution loop: the ring elapses their
+        # emulated transfers under direct execution (exactly as _run_batched
+        # overlaps healthy group reads); execution consumes each as it
+        # retires
+        recon_futs = []
+        for c in recon:
+            try:
+                recon_futs.append(
+                    (c, self.array.submit_read(zone_id, c.logical_off,
+                                               c.n_blocks)))
+            except ZNSError as e:
+                raise ArrayOffloadError(
+                    f"offload failed: chunk {c.index} of zone {zone_id} is "
+                    f"unrecoverable under {self.array.redundancy}: {e}"
+                ) from e
+        for c in rest:
+            try:
                 result = execute_extent(
                     device, program, zone_id, c.local_off, c.n_blocks,
                     tier=tier, pages_per_read=self.pages_per_read,
                     cache=self.cache, prefetch_depth=self.prefetch_depth,
                 )
-                run.vals[c.index] = result.value
-                run.compile_s += result.compile_seconds
-                run.insns += result.insns_executed
-                run.read_s += result.read_seconds
-                run.compute_s += result.exec_seconds
-                run.hits += result.cache_hits
-                run.misses += result.cache_misses
-        except ZNSError as e:
-            raise ArrayOffloadError(
-                f"offload degraded: member device {dev_idx} failed on zone "
-                f"{zone_id}: {e}"
-            ) from e
+            except ZNSError as e:
+                self._member_failed(dev_idx, zone_id, e)
+                self._run_chunk_degraded(zone_id, c, program, tier, run)
+                continue
+            if c.degraded:
+                run.degraded += 1
+            run.vals[c.index] = result.value
+            run.compile_s += result.compile_seconds
+            run.insns += result.insns_executed
+            run.read_s += result.read_seconds
+            run.compute_s += result.exec_seconds
+            run.hits += result.cache_hits
+            run.misses += result.cache_misses
+        for c, fut in recon_futs:
+            self._run_chunk_degraded(zone_id, c, program, tier, run, fut=fut)
         # overlap WITHIN this worker: transfer+compute time that exceeded the
         # worker's own wall clock must have run concurrently (the prefetcher)
         wall = time.perf_counter() - t_worker - run.compile_s
         run.overlap_s = max(run.read_s + run.compute_s - max(wall, 0.0), 0.0)
         return run
+
+    def _member_failed(self, dev_idx: int, zone_id: int, e: ZNSError) -> None:
+        """Raise the PR 2 clean degradation error when the array has no
+        redundancy to absorb the member failure; otherwise return and let
+        the caller reconstruct."""
+        if self.array.redundancy == "raid0":
+            raise ArrayOffloadError(
+                f"offload degraded: member device {dev_idx} failed on zone "
+                f"{zone_id}: {e}"
+            ) from e
+
+    def _run_chunk_degraded(self, zone_id: int, c: StripeChunk,
+                            program: Program, tier: str,
+                            run: "_DeviceRun", *,
+                            fut=None) -> None:
+        """Execute one chunk whose member cannot serve it: rebuild the bytes
+        through the array's degraded read (raid1 mirror redirect / xor
+        survivor reconstruction, riding the completion ring) and run the
+        SAME execution tier over the host buffer — bit-identical results by
+        construction. Pass a pre-submitted ``fut`` to overlap many chunks'
+        reconstruction transfers (the planned-degraded fan-out does)."""
+        try:
+            if fut is None:
+                fut = self.array.submit_read(zone_id, c.logical_off,
+                                             c.n_blocks)
+            flat = np.asarray(fut.result())
+        except ZNSError as e:
+            raise ArrayOffloadError(
+                f"offload failed: chunk {c.index} of zone {zone_id} is "
+                f"unrecoverable under {self.array.redundancy}: {e}"
+            ) from e
+        src = _ExtentSource(self.array.block_bytes, c.local_off, flat)
+        result = execute_extent(
+            src, program, zone_id, c.local_off, c.n_blocks,
+            tier=tier, pages_per_read=self.pages_per_read,
+            cache=self.cache, prefetch_depth=0,
+        )
+        run.vals[c.index] = result.value
+        run.compile_s += result.compile_seconds
+        run.insns += result.insns_executed
+        run.read_s += result.read_seconds + fut.service_seconds
+        run.compute_s += result.exec_seconds
+        run.hits += result.cache_hits
+        run.misses += result.cache_misses
+        run.degraded += 1
 
     def _run_batched(
         self, device, zone_id: int, full: list[StripeChunk], program: Program,
@@ -613,6 +741,12 @@ class OffloadScheduler:
         their emulated transfers in order), so group ``g+1``'s transfer
         elapses while group ``g`` executes — in-flight depth is the number of
         groups, with no prefetch pool and no thread parked per read.
+
+        raid0/xor full chunks of one device are contiguous in member-local
+        space, so ONE read covers each group; raid1's round-robin replica
+        assignment interleaves the mirror pair by row, so a group may be
+        member-locally discontiguous — those groups read per chunk (all
+        still in flight up front) and stack for the one compiled call.
         """
         stripe = self.array.stripe_blocks
         dtype = np.dtype(program.input_dtype)
@@ -631,8 +765,17 @@ class OffloadScheduler:
         groups = [full[i:i + m_b] for i in range(0, m, m_b)]
 
         run = _DeviceRun({})
-        futs = [device.submit_read(zone_id, g[0].local_off, len(g) * stripe,
-                                   dtype=dtype) for g in groups]
+
+        def group_read(g: list[StripeChunk]):
+            contiguous = all(g[i + 1].local_off == g[i].local_off + stripe
+                             for i in range(len(g) - 1))
+            if contiguous:
+                return device.submit_read(zone_id, g[0].local_off,
+                                          len(g) * stripe, dtype=dtype)
+            return [device.submit_read(zone_id, c.local_off, stripe,
+                                       dtype=dtype) for c in g]
+
+        futs = [group_read(g) for g in groups]
         if tier == CsdTier.KERNEL:
             from repro.kernels.zone_filter import ops as zf_ops
             key = ("kernel_batched", program, m_b, chunk_pages, page_elems)
@@ -648,11 +791,17 @@ class OffloadScheduler:
         run.misses += int(not hit)
 
         for group, fut in zip(groups, futs):
-            pages = fut.result().reshape(len(group), chunk_pages, page_elems)
-            # emulated transfer time of this group (the time the ring hid
-            # under earlier groups' execution; same meaning the thread-backed
-            # fetch wall-clock had)
-            run.read_s += fut.service_seconds
+            if isinstance(fut, list):
+                pages = np.stack([f.result().reshape(chunk_pages, page_elems)
+                                  for f in fut])
+                run.read_s += sum(f.service_seconds for f in fut)
+            else:
+                pages = fut.result().reshape(len(group), chunk_pages,
+                                             page_elems)
+                # emulated transfer time of this group (the time the ring hid
+                # under earlier groups' execution; same meaning the thread-
+                # backed fetch wall-clock had)
+                run.read_s += fut.service_seconds
             if len(group) != m_b:
                 pages = np.concatenate(
                     [pages, np.zeros((m_b - len(group), chunk_pages,

@@ -1,28 +1,50 @@
-"""RAID-0-style zone striping over multiple ZNS devices.
+"""Zone striping with redundancy over multiple ZNS devices.
 
 The paper defers multi-device operation as future work; real CSD deployments
-aggregate many devices behind one logical address space. A
-:class:`StripedZoneArray` presents N identical :class:`~repro.zns.ZonedDevice`
-members as ONE logical zoned device:
+aggregate many devices behind one logical address space — and must survive a
+member failure. A :class:`StripedZoneArray` presents N identical
+:class:`~repro.zns.ZonedDevice` members as ONE logical zoned device in one of
+three redundancy modes:
 
-  * logical zone ``z`` is the union of member zone ``z`` on every device;
-    its capacity is ``N x member_zone_blocks``;
-  * the logical block stream is striped round-robin in *chunks* of
-    ``stripe_blocks`` blocks: logical chunk ``k`` lives on device ``k % N``
-    at member-local chunk ``k // N``;
-  * appends and reads preserve ZNS semantics end-to-end — the logical write
-    pointer is the sum of the member write pointers, member appends land
-    exactly at each member's write pointer (a contiguous logical range maps
-    to one contiguous member-local range per device), and the logical zone
-    state machine is derived from the members'.
+  * ``raid0`` (default) — pure striping: logical chunk ``k`` (column
+    ``k % C``, row ``k // C``) lives on member ``k % N`` at member-local
+    offset ``row * stripe_blocks``; a member-zone failure kills the logical
+    zone (the clean-error path PR 2 tested);
+  * ``raid1`` — mirrored stripe groups: members pair up into ``N/2`` columns
+    and each chunk lands on BOTH partners of its column. Healthy reads
+    round-robin the mirror pair by stripe row (up to ~2x aggregate read
+    bandwidth); with one partner OFFLINE every read redirects to the
+    survivor — bit-identical, no reconstruction math;
+  * ``xor`` — RAID-5-style rotating parity: ``N-1`` data chunks per stripe
+    row plus one XOR parity chunk on the rotating parity member. A dead
+    member's chunk is reconstructed by XOR-ing the surviving row members;
+    the parity chunk of the (at most one) incomplete tail row has not landed
+    yet, so a host-side parity accumulator (the NVRAM parity buffer of a
+    real RAID controller) stands in for it.
+
+Shared invariants, every mode:
+
+  * appends and reads preserve ZNS semantics end-to-end — member appends
+    land exactly at each member's write pointer, the logical zone state
+    machine is derived from the members', and the logical write pointer
+    advances only once every member submission of an append has landed;
+  * member transfers fan out as in-flight completion-ring descriptors
+    (:mod:`repro.zns.ring`): an N-member read holds N reactor slots and ZERO
+    worker threads, and degraded-read reconstruction rides the SAME reactor
+    clocks — survivor reads are ordinary member transfers, the XOR combine
+    runs at completion time (off the reactor pump, on the gather pool);
+  * a member failing mid-fan-out can never orphan the aggregate future:
+    already-submitted member completions settle a barrier that retires the
+    aggregate with the error (and a torn append fences the zone READ_ONLY).
 
 The class is a drop-in for ``ZonedDevice`` everywhere the repo consumes one
-(``NvmCsd``, ``ZoneDataStore``, ``ZonedCheckpointStore``): a 1-member array
-is the degenerate single-device path.
+(``NvmCsd``, ``ZoneDataStore``, ``ZonedCheckpointStore``): a 1-member raid0
+array is the degenerate single-device path.
 """
 from __future__ import annotations
 
-import concurrent.futures
+import atexit
+import queue
 import threading
 from typing import Callable, Optional, Sequence
 
@@ -30,6 +52,7 @@ import numpy as np
 
 from repro.zns.device import (
     OutOfBoundsError,
+    ZNSError,
     ZonedDevice,
     ZoneFullError,
     ZoneState,
@@ -44,47 +67,217 @@ from repro.zns.ring import (
     in_reactor_thread,
 )
 
-__all__ = ["StripedZoneArray", "LogicalZone", "StripeChunk"]
+__all__ = ["StripedZoneArray", "LogicalZone", "StripeChunk", "REDUNDANCY_MODES"]
 
-# Gather-interleave memcpys for reactor-retired member reads run here, NOT on
-# the reactor thread: the reactor must stay a pointer-moving completion pump
-# (a pair of concurrent 64 MiB striped reads would otherwise serialize
-# ~100 MiB of memcpy ahead of every other due completion in the process).
-# Bounded and shared — threads scale with concurrent gathers in progress,
-# never with in-flight transfers, so the ring model's claim stands.
-_gather_pool: Optional[concurrent.futures.ThreadPoolExecutor] = None
+REDUNDANCY_MODES = ("raid0", "raid1", "xor")
+
+
+class _GatherPool:
+    """Bounded pool of DAEMON threads for gather-interleave / XOR-combine
+    memcpys of reactor-retired member reads.
+
+    The reactor must stay a pointer-moving completion pump (a pair of
+    concurrent 64 MiB striped reads would otherwise serialize ~100 MiB of
+    memcpy ahead of every other due completion in the process), so heavy
+    completion work lands here. ``concurrent.futures.ThreadPoolExecutor``
+    workers are non-daemonic — they outlive test teardown and stall
+    interpreter exit until the global ``_python_exit`` join — so this
+    minimal replacement mirrors the reactor's lifecycle handling
+    (:mod:`repro.zns.ring`): lazily-spawned daemon workers plus an atexit
+    shutdown. Bounded and shared — threads scale with concurrent gathers in
+    progress, never with in-flight transfers, so the ring model's claim
+    stands.
+    """
+
+    def __init__(self, max_workers: int = 4):
+        self._q: "queue.SimpleQueue" = queue.SimpleQueue()
+        self._lock = threading.Lock()
+        self._threads: list[threading.Thread] = []
+        self._max = max_workers
+        self._closed = False
+
+    def submit(self, fn: Callable[[], None]) -> None:
+        with self._lock:
+            if not self._closed:
+                self._q.put(fn)
+                if len(self._threads) < self._max:
+                    t = threading.Thread(
+                        target=self._work, daemon=True,
+                        name=f"stripe-gather-{len(self._threads)}")
+                    self._threads.append(t)
+                    t.start()
+                return
+        # pool already shut down (interpreter exit): run inline rather than
+        # drop the gather — its barrier slot MUST settle or a caller blocked
+        # in result() with no timeout would hang forever
+        fn()
+
+    def _work(self) -> None:
+        while True:
+            fn = self._q.get()
+            if fn is None:
+                return
+            try:
+                fn()
+            except Exception:
+                pass  # gather closures settle their barrier slot themselves
+
+    def shutdown(self, timeout: float = 1.0) -> None:
+        """Drain the workers (atexit): daemon threads would not block exit,
+        but an orderly stop keeps in-flight gathers from dying mid-memcpy."""
+        with self._lock:
+            self._closed = True
+            threads = list(self._threads)
+        for _ in threads:
+            self._q.put(None)
+        for t in threads:
+            t.join(timeout=timeout)
+
+
+_gather_pool: Optional[_GatherPool] = None
 _gather_pool_lock = threading.Lock()
 
 
-def _gather_executor() -> concurrent.futures.ThreadPoolExecutor:
+def _gather_executor() -> _GatherPool:
     global _gather_pool
     with _gather_pool_lock:
         if _gather_pool is None:
-            _gather_pool = concurrent.futures.ThreadPoolExecutor(
-                max_workers=4, thread_name_prefix="stripe-gather")
+            _gather_pool = _GatherPool(max_workers=4)
+            atexit.register(_gather_pool.shutdown)
         return _gather_pool
+
+
+def _off_reactor(fn: Callable[[], None]) -> None:
+    """Run ``fn`` on the gather pool when called from a reactor completion
+    pump, inline otherwise — detected by thread, not by submission phase, so
+    the pump never memcpys even when a short emulated transfer retires
+    mid-registration."""
+    if in_reactor_thread():
+        _gather_executor().submit(fn)
+    else:
+        fn()
 
 
 class StripeChunk:
     """One stripe chunk of a logical zone extent, in logical order.
 
     ``index`` is the global chunk index (logical order key), ``device`` the
-    member device index, ``local_off``/``n_blocks`` the member-local extent.
+    member the chunk is READ from under the current member health (for
+    ``raid1`` the round-robin replica, redirected to the survivor when its
+    partner is OFFLINE; for a reconstructing ``xor`` chunk the row's parity
+    member, the anchor of the survivor fan-in), ``local_off``/``n_blocks``
+    the member-local extent. ``degraded`` marks a chunk served without its
+    preferred member; ``reconstruct`` marks an xor chunk whose bytes must be
+    rebuilt from the surviving row members rather than read directly.
     """
 
-    __slots__ = ("index", "device", "local_off", "n_blocks", "logical_off")
+    __slots__ = ("index", "device", "local_off", "n_blocks", "logical_off",
+                 "row", "col", "degraded", "reconstruct")
 
     def __init__(self, index: int, device: int, local_off: int,
-                 n_blocks: int, logical_off: int):
+                 n_blocks: int, logical_off: int, *, row: int = 0,
+                 col: int = 0, degraded: bool = False,
+                 reconstruct: bool = False):
         self.index = index
         self.device = device
         self.local_off = local_off
         self.n_blocks = n_blocks
         self.logical_off = logical_off
+        self.row = row
+        self.col = col
+        self.degraded = degraded
+        self.reconstruct = reconstruct
 
     def __repr__(self) -> str:
+        flags = "".join(
+            [" degraded" if self.degraded else "",
+             " reconstruct" if self.reconstruct else ""])
         return (f"StripeChunk(#{self.index} dev{self.device} "
-                f"local[{self.local_off},+{self.n_blocks}))")
+                f"local[{self.local_off},+{self.n_blocks}){flags})")
+
+
+class _DirectRead:
+    """One coalesced member-extent read, scattered into the logical buffer
+    at completion time (possibly covering several logical chunks)."""
+
+    __slots__ = ("device", "local_off", "n_blocks", "copies", "fut")
+
+    def __init__(self, device: int, local_off: int, n_blocks: int,
+                 copies: list[tuple[int, int, int]]):
+        self.device = device
+        self.local_off = local_off
+        self.n_blocks = n_blocks
+        self.copies = copies          # (src_block, dst_block, n_blocks)
+        self.fut: Optional[IoFuture] = None
+
+    def submit(self, arr: "StripedZoneArray", zone_id: int) -> tuple:
+        self.fut = arr.devices[self.device].submit_read(
+            zone_id, self.local_off, self.n_blocks)
+        return (self.fut,)
+
+    def attach(self, arr: "StripedZoneArray", out: np.ndarray,
+               barrier: CompletionBarrier, slot: int) -> None:
+        fut = self.fut
+
+        def apply() -> None:
+            err = fut.error
+            if err is None:
+                try:
+                    buf = np.asarray(fut._value).reshape(-1, arr.block_bytes)
+                    for src, dst, n in self.copies:
+                        out[dst:dst + n] = buf[src:src + n]
+                except BaseException as e:
+                    err = e
+            barrier.settle(slot, err)
+
+        fut.add_done_callback(lambda _f: _off_reactor(apply))
+
+
+class _XorReconstruct:
+    """Rebuild a dead member's chunk span as the XOR of the surviving row
+    members. ``seed`` starts as zeros (complete row: the parity chunk is one
+    of the reads) or as the host parity-accumulator slice (tail row: the
+    parity chunk has not landed yet, the accumulator IS its current value).
+    Survivor reads are ordinary member transfers on the completion ring; the
+    XOR combine runs once the last of them retires."""
+
+    __slots__ = ("reads", "seed", "dst", "n_blocks", "futs")
+
+    def __init__(self, reads: list[tuple[int, int, int]], seed: np.ndarray,
+                 dst: int, n_blocks: int):
+        self.reads = reads            # (device, local_off, n_avail > 0)
+        self.seed = seed              # (n_blocks, block_bytes) uint8, owned
+        self.dst = dst
+        self.n_blocks = n_blocks
+        self.futs: list[IoFuture] = []
+
+    def submit(self, arr: "StripedZoneArray", zone_id: int) -> tuple:
+        self.futs = [arr.devices[d].submit_read(zone_id, lo, n)
+                     for d, lo, n in self.reads]
+        return tuple(self.futs)
+
+    def attach(self, arr: "StripedZoneArray", out: np.ndarray,
+               barrier: CompletionBarrier, slot: int) -> None:
+        def on_all(vals: list, err: Optional[BaseException]) -> None:
+            def apply() -> None:
+                e = err
+                if e is None:
+                    try:
+                        acc = self.seed
+                        for v in vals:
+                            buf = np.asarray(v).reshape(-1, arr.block_bytes)
+                            acc[: len(buf)] ^= buf
+                        out[self.dst: self.dst + self.n_blocks] = acc
+                    except BaseException as ee:
+                        e = ee
+                barrier.settle(slot, e)
+
+            _off_reactor(apply)
+
+        inner = CompletionBarrier(len(self.futs), on_all)
+        for i, f in enumerate(self.futs):
+            f.add_done_callback(lambda f, i=i: inner.settle(
+                i, f.error, None if f.error is not None else f._value))
 
 
 class LogicalZone:
@@ -92,9 +285,10 @@ class LogicalZone:
 
     Duck-types the fields of :class:`repro.zns.device.Zone` that callers use:
     ``zone_id``, ``write_pointer`` (settable — distributes to members, needed
-    by checkpoint recovery), ``state`` (derived; settable — broadcast),
-    ``capacity_blocks``, ``remaining_blocks``, ``is_writable``,
-    ``reset_count``.
+    by checkpoint recovery), ``state`` (derived; settable — broadcast to
+    surviving members), ``capacity_blocks``, ``remaining_blocks``,
+    ``is_writable``, ``reset_count``, plus ``degraded`` (a member zone is
+    OFFLINE but the redundancy mode still covers its data).
     """
 
     def __init__(self, array: "StripedZoneArray", zone_id: int):
@@ -110,41 +304,48 @@ class LogicalZone:
 
     @property
     def write_pointer(self) -> int:
-        return sum(z.write_pointer for z in self._members())
+        return self._array._wp[self.zone_id]
 
     @write_pointer.setter
     def write_pointer(self, w: int) -> None:
-        # Distribute a logical write pointer across members: member d owns
-        # the logical blocks whose stripe chunk index is congruent to d.
-        arr = self._array
-        s, n = arr.stripe_blocks, arr.n_devices
-        full_rows, rem = divmod(int(w), s * n)
-        rem_chunks, partial = divmod(rem, s)
-        for d, z in enumerate(self._members()):
-            wp = full_rows * s
-            if d < rem_chunks:
-                wp += s
-            elif d == rem_chunks:
-                wp += partial
-            z.write_pointer = wp
+        self._array._set_write_pointer(self.zone_id, int(w))
 
     @property
     def state(self) -> ZoneState:
-        states = {z.state for z in self._members()}
-        if ZoneState.OFFLINE in states:
-            return ZoneState.OFFLINE
-        if ZoneState.READ_ONLY in states:
-            return ZoneState.READ_ONLY
-        if states == {ZoneState.EMPTY}:
-            return ZoneState.EMPTY
-        if states == {ZoneState.FULL}:
-            return ZoneState.FULL
-        return ZoneState.OPEN
+        arr = self._array
+        with arr._lock:
+            states = [z.state for z in self._members()]
+            off = [i for i, s in enumerate(states) if s is ZoneState.OFFLINE]
+            if arr._is_unrecoverable(off):
+                return ZoneState.OFFLINE
+            if off or self.zone_id in arr._fenced:
+                # degraded (redundancy covers the dead member) or torn (a
+                # mid-append member failure): committed data stays readable,
+                # new appends are refused until reset/rebuild
+                return ZoneState.READ_ONLY
+            alive = set(states)
+            if ZoneState.READ_ONLY in alive:
+                return ZoneState.READ_ONLY
+            if alive == {ZoneState.EMPTY}:
+                return ZoneState.EMPTY
+            if alive == {ZoneState.FULL}:
+                return ZoneState.FULL
+            return ZoneState.OPEN
 
     @state.setter
     def state(self, st: ZoneState) -> None:
-        for z in self._members():
-            z.state = st
+        with self._array._lock:
+            for z in self._members():
+                if z.state is ZoneState.OFFLINE:
+                    continue    # fault injection is not undone by a broadcast
+                z.state = st
+
+    @property
+    def degraded(self) -> bool:
+        arr = self._array
+        with arr._lock:
+            off = arr._offline_members(self.zone_id)
+            return bool(off) and not arr._is_unrecoverable(off)
 
     @property
     def reset_count(self) -> int:
@@ -164,9 +365,12 @@ class LogicalZone:
 
 
 class StripedZoneArray:
-    """N identical ZNS devices presented as one logical zoned device."""
+    """N identical ZNS devices presented as one logical zoned device, with
+    optional redundancy (``raid0`` striping, ``raid1`` mirror pairs, ``xor``
+    rotating parity)."""
 
-    def __init__(self, devices: Sequence[ZonedDevice], *, stripe_blocks: int = 16):
+    def __init__(self, devices: Sequence[ZonedDevice], *,
+                 stripe_blocks: int = 16, redundancy: str = "raid0"):
         if not devices:
             raise ValueError("StripedZoneArray needs at least one device")
         d0 = devices[0]
@@ -184,15 +388,53 @@ class StripedZoneArray:
                 f"stripe_blocks {stripe_blocks} must divide member zone size "
                 f"{d0.zone_blocks} (chunks may not straddle member zones)"
             )
+        if redundancy not in REDUNDANCY_MODES:
+            raise ValueError(
+                f"redundancy {redundancy!r} not one of {REDUNDANCY_MODES}")
         self.devices = list(devices)
         self.n_devices = len(self.devices)
         self.stripe_blocks = int(stripe_blocks)
+        self.redundancy = redundancy
+        if redundancy == "raid1":
+            if self.n_devices < 2 or self.n_devices % 2:
+                raise ValueError(
+                    f"raid1 needs an even member count >= 2, got {self.n_devices}")
+            self.data_columns = self.n_devices // 2
+        elif redundancy == "xor":
+            if self.n_devices < 3:
+                raise ValueError(
+                    f"xor needs >= 3 members (use raid1 for 2), got {self.n_devices}")
+            self.data_columns = self.n_devices - 1
+        else:
+            self.data_columns = self.n_devices
         self.num_zones = d0.num_zones
         self.block_bytes = d0.block_bytes
-        # logical geometry: every member contributes its whole zone
-        self.zone_blocks = d0.zone_blocks * self.n_devices
+        # logical geometry: every DATA column contributes its whole zone
+        # (raid1 pairs store one copy per partner; xor spends one member's
+        # worth of capacity on parity)
+        self.zone_blocks = d0.zone_blocks * self.data_columns
         self.zone_bytes = self.zone_blocks * self.block_bytes
         self._lock = threading.RLock()
+        # logical write pointers are array state (the one source of truth):
+        # member write pointers derive from them per mode — xor parity
+        # rotation makes a member-sum derivation ambiguous. Appends advance
+        # _wp LAST, under the lock, once every member submission landed.
+        self._wp = [0] * self.num_zones
+        # zones torn by a mid-append member failure: some members landed
+        # their share, others did not — committed data (< _wp) stays
+        # readable, appends are fenced until reset_zone
+        self._fenced: set[int] = set()
+        # xor: host-side parity accumulator per zone — XOR of all data
+        # landed in the (at most one) incomplete tail stripe row, i.e. the
+        # value the row's parity chunk will have once the row completes
+        # (a real RAID controller's NVRAM parity buffer)
+        self._pacc: dict[int, np.ndarray] = {}
+        # zones whose tail-row accumulator could NOT be recomputed at
+        # write-pointer recovery (a tail-row data member was OFFLINE and its
+        # parity never landed): tail reconstruction for these must raise,
+        # never fabricate zero bytes
+        self._pacc_lost: set[int] = set()
+        self._degraded_reads = 0
         # member transfers fan out as in-flight completion-ring descriptors
         # (repro.zns.ring): an N-member read holds N reactor slots and ZERO
         # worker threads, and CONCURRENT logical reads (different zones /
@@ -204,27 +446,96 @@ class StripedZoneArray:
         self._gather_bytes_copied = 0
 
     # -------------------------------------------------------- address math
-    def block_location(self, block: int) -> tuple[int, int]:
-        """Logical block -> (device index, member-local block)."""
-        s, n = self.stripe_blocks, self.n_devices
-        chunk, within = divmod(block, s)
-        return chunk % n, (chunk // n) * s + within
+    def _row_devices(self, row: int) -> tuple[list[int], int]:
+        """xor: (data devices in column order, parity device) for a stripe
+        row — left-symmetric rotation, so parity load spreads evenly."""
+        p = (self.n_devices - 1) - (row % self.n_devices)
+        return [d for d in range(self.n_devices) if d != p], p
+
+    def _replicas(self, row: int, col: int) -> tuple[int, ...]:
+        """Members holding chunk (row, col)'s data, preferred-read first
+        (raid1 round-robins the mirror pair by row for ~2x read bandwidth)."""
+        if self.redundancy == "raid1":
+            pref = 2 * col + (row & 1)
+            return (pref, 2 * col + ((row & 1) ^ 1))
+        if self.redundancy == "xor":
+            return (self._row_devices(row)[0][col],)
+        return (col,)
+
+    def _offline_members(self, zone_id: int) -> list[int]:
+        return [i for i, d in enumerate(self.devices)
+                if d.zone(zone_id).state is ZoneState.OFFLINE]
+
+    def _is_unrecoverable(self, offline: list[int]) -> bool:
+        """True when the OFFLINE member set defeats the redundancy mode."""
+        if not offline:
+            return False
+        if self.redundancy == "raid0":
+            return True
+        if self.redundancy == "raid1":
+            s = set(offline)
+            return any(2 * c in s and 2 * c + 1 in s
+                       for c in range(self.data_columns))
+        return len(offline) > 1
+
+    def _chunk_source(self, zone_id: int, row: int, col: int,
+                      alive: list[bool]) -> tuple[int, bool, bool]:
+        """(read device, degraded, reconstruct) for chunk (row, col) under
+        the current member health."""
+        if self.redundancy == "raid0":
+            # dead members surface at member-read time (the PR 2 clean-error
+            # contract); the logical zone is OFFLINE anyway
+            return col, False, False
+        if self.redundancy == "raid1":
+            pref, alt = self._replicas(row, col)
+            if alive[pref]:
+                return pref, False, False
+            if alive[alt]:
+                return alt, True, False
+            raise ZoneStateError(
+                f"zone {zone_id} unrecoverable: both mirrors of column {col} "
+                f"(devices {2 * col},{2 * col + 1}) are offline")
+        data_devs, parity = self._row_devices(row)
+        d = data_devs[col]
+        if alive[d]:
+            return d, False, False
+        if sum(1 for a in alive if not a) > 1:
+            raise ZoneStateError(
+                f"zone {zone_id} unrecoverable: more than one member offline "
+                f"under xor parity")
+        return parity, True, True
 
     def chunks(self, zone_id: int, block_off: int, n_blocks: int) -> list[StripeChunk]:
-        """Decompose a logical extent into stripe chunks, in logical order.
+        """Decompose a logical extent into stripe chunks, in logical order,
+        with health-aware read-source assignment.
 
         Each chunk is contiguous both logically and on its member device —
-        the unit the offload scheduler fans out.
+        the unit the offload scheduler fans out. Chunks whose preferred
+        member zone is OFFLINE come back ``degraded`` (raid1: redirected to
+        the mirror partner) or ``degraded + reconstruct`` (xor: must be
+        rebuilt from the surviving row members).
         """
+        with self._lock:
+            return self._plan_chunks(zone_id, block_off, n_blocks)
+
+    def _plan_chunks(self, zone_id: int, block_off: int,
+                     n_blocks: int) -> list[StripeChunk]:
         self.zone(zone_id)  # bounds-check the zone id
-        s = self.stripe_blocks
+        s, C = self.stripe_blocks, self.data_columns
+        alive = [d.zone(zone_id).state is not ZoneState.OFFLINE
+                 for d in self.devices]
         out: list[StripeChunk] = []
         b, end = block_off, block_off + n_blocks
         while b < end:
             chunk = b // s
             take = min(end - b, (chunk + 1) * s - b)
-            dev, local = self.block_location(b)
-            out.append(StripeChunk(chunk, dev, local, take, b))
+            row, col = divmod(chunk, C)
+            local = row * s + b % s
+            device, degraded, recon = self._chunk_source(
+                zone_id, row, col, alive)
+            out.append(StripeChunk(chunk, device, local, take, b, row=row,
+                                   col=col, degraded=degraded,
+                                   reconstruct=recon))
             b += take
         return out
 
@@ -240,15 +551,97 @@ class StripedZoneArray:
     def open_zones(self) -> list[LogicalZone]:
         return [z for z in self.zones if z.state == ZoneState.OPEN]
 
+    def _pacc_for(self, zone_id: int) -> np.ndarray:
+        acc = self._pacc.get(zone_id)
+        if acc is None:
+            acc = self._pacc[zone_id] = np.zeros(
+                (self.stripe_blocks, self.block_bytes), np.uint8)
+        return acc
+
     # ------------------------------------------------------------- append
     def zone_append(self, zone_id: int, data: np.ndarray | bytes) -> int:
         """Striped Zone Append: split ``data`` into stripe chunks and append
-        each member's share at that member's write pointer. Returns the
-        logical start block. Synchronous shim over :meth:`submit_append` —
-        member transfers share one wall-clock window (each member's emulated
-        busy time runs on its own zone clock), the call returns at the last
-        member's completion deadline."""
+        each member's share at that member's write pointer (mirrored on both
+        partners under raid1; with a parity chunk per completed stripe row
+        under xor). Returns the logical start block. Synchronous shim over
+        :meth:`submit_append` — member transfers share one wall-clock window
+        (each member's emulated busy time runs on its own zone clock), the
+        call returns at the last member's completion deadline."""
         return self.submit_append(zone_id, data).result()
+
+    def _append_plan(
+        self, zone_id: int, start: int, blocks: np.ndarray
+    ) -> list[tuple[int, np.ndarray, int]]:
+        """Member appends for logical blocks [start, start+len(blocks)) as
+        ``(device, payload, expected_landing_block)`` in submission order.
+        Under xor this also folds the data into the zone's parity accumulator
+        and emits the parity-chunk append of every row the payload completes.
+        Caller holds the array lock."""
+        s, C = self.stripe_blocks, self.data_columns
+        n = len(blocks)
+        plan: list[tuple[int, np.ndarray, int]] = []
+        if self.redundancy != "xor":
+            owner_col = (np.arange(start, start + n) // s) % C
+            for c in range(C):
+                sel = owner_col == c
+                if not sel.any():
+                    continue
+                share = blocks[sel]
+                first = start + int(np.flatnonzero(sel)[0])
+                chunk, within = divmod(first, s)
+                expect = (chunk // C) * s + within
+                devs = (c,) if self.redundancy == "raid0" \
+                    else (2 * c, 2 * c + 1)
+                for dev in devs:
+                    plan.append((dev, share, expect))
+            return plan
+        # A member's data chunks across consecutive rows are member-locally
+        # contiguous except where the parity rotation makes it the parity
+        # member, so buffer each member's share and flush one coalesced
+        # append per contiguous run — ~(N-1) rows per member append instead
+        # of one append per chunk. A member's parity chunk flushes its
+        # buffered data first (its data for earlier rows must land below the
+        # parity slot).
+        acc = self._pacc_for(zone_id)
+        pending: dict[int, list] = {}   # dev -> [parts, expect_local, nblocks]
+
+        def flush(dev: int) -> None:
+            entry = pending.pop(dev, None)
+            if entry is None:
+                return
+            parts, expect, _nb = entry
+            payload = parts[0] if len(parts) == 1 else np.concatenate(parts)
+            plan.append((dev, payload, expect))
+
+        b, end = start, start + n
+        while b < end:
+            chunk = b // s
+            take = min(end - b, (chunk + 1) * s - b)
+            row, col = divmod(chunk, C)
+            within = b % s
+            data_devs, parity = self._row_devices(row)
+            d = data_devs[col]
+            share = blocks[b - start: b - start + take]
+            local = row * s + within
+            entry = pending.get(d)
+            if entry is not None and entry[1] + entry[2] == local:
+                entry[0].append(share)
+                entry[2] += take
+            else:
+                flush(d)
+                pending[d] = [[share], local, take]
+            acc[within: within + take] ^= share
+            if col == C - 1 and b + take == (chunk + 1) * s:
+                # the stripe row is complete: its parity value is final —
+                # append it to the rotating parity member and reset the
+                # accumulator for the next row
+                flush(parity)
+                plan.append((parity, acc.copy(), row * s))
+                acc[:] = 0
+            b += take
+        for dev in list(pending):
+            flush(dev)
+        return plan
 
     def submit_append(self, zone_id: int, data: np.ndarray | bytes, *,
                       ring: Optional[CompletionRing] = None) -> IoFuture:
@@ -256,10 +649,19 @@ class StripedZoneArray:
         (metadata and bytes, under the array lock), the returned future
         retires when the LAST member completion does, with the logical start
         block as its value. ``fut.submitted_block`` carries the logical start
-        synchronously."""
+        synchronously.
+
+        A member failing mid-fan-out (e.g. its zone going OFFLINE between
+        the array check and its submission) FAILS the aggregate instead of
+        orphaning the already-submitted member futures: they settle a
+        barrier that retires the aggregate with the error once the last of
+        them completes, and the zone is fenced READ_ONLY (its members no
+        longer agree on the stripe stream) until ``reset_zone``.
+        """
         raw = payload_as_uint8(data)
         nblocks = -(-raw.size // self.block_bytes)  # ceil
         member_futs: list[IoFuture] = []
+        error: Optional[BaseException] = None
         with self._lock:
             z = self.zone(zone_id)
             if not z.is_writable:
@@ -274,23 +676,32 @@ class StripedZoneArray:
             padded = np.zeros(nblocks * self.block_bytes, np.uint8)
             padded[: raw.size] = raw
             blocks = padded.reshape(nblocks, self.block_bytes)
-            owner = ((np.arange(start, start + nblocks) // self.stripe_blocks)
-                     % self.n_devices)
-            for d, dev in enumerate(self.devices):
-                share = blocks[owner == d]
-                if share.size == 0:
-                    continue
-                # member-local target is contiguous and starts at the member
-                # write pointer (appends only ever go through the array)
-                f = dev.submit_append(zone_id, share)
-                expect = self.block_location(
-                    int(np.flatnonzero(owner == d)[0]) + start)[1]
-                if f.submitted_block != expect:
-                    raise ZoneStateError(
-                        f"stripe desync on device {d} zone {zone_id}: member "
-                        f"append landed at {f.submitted_block}, expected {expect}"
-                    )
-                member_futs.append(f)
+            acc_backup = self._pacc_for(zone_id).copy() \
+                if self.redundancy == "xor" else None
+            try:
+                plan = self._append_plan(zone_id, start, blocks)
+                for dev_idx, payload, expect in plan:
+                    f = self.devices[dev_idx].submit_append(zone_id, payload)
+                    member_futs.append(f)
+                    # member-local target is contiguous and starts at the
+                    # member write pointer (appends only go through the array)
+                    if f.submitted_block != expect:
+                        raise ZoneStateError(
+                            f"stripe desync on device {dev_idx} zone {zone_id}: "
+                            f"member append landed at {f.submitted_block}, "
+                            f"expected {expect}"
+                        )
+            except BaseException as e:
+                error = e
+                if acc_backup is not None:
+                    self._pacc[zone_id] = acc_backup
+                if member_futs:
+                    self._fenced.add(zone_id)
+            else:
+                # the logical write pointer advances LAST, under this lock:
+                # readers never see a range whose member shares have not all
+                # been submitted
+                self._wp[zone_id] = start + nblocks
 
         agg = IoFuture(op="append", zone_id=zone_id, block_off=start,
                        nblocks=nblocks,
@@ -299,6 +710,13 @@ class StripedZoneArray:
                            default=0.0),
                        ring=ring)
         agg.submitted_block = start
+        if error is not None:
+            err = error
+            barrier = CompletionBarrier(
+                len(member_futs), lambda _vals, _e: agg.fail(err))
+            for i, f in enumerate(member_futs):
+                f.add_done_callback(lambda f, i=i: barrier.settle(i, f.error))
+            return agg
         self._join_members(agg, member_futs, lambda: start)
         return agg
 
@@ -318,14 +736,14 @@ class StripedZoneArray:
 
     # --------------------------------------------------------------- read
     def read_blocks(self, zone_id: int, block_off: int, nblocks: int) -> np.ndarray:
-        """Striped read: one contiguous member read per device, interleaved
-        back into logical order.
+        """Striped read, interleaved back into logical order (reconstructing
+        any chunk whose member is OFFLINE under raid1/xor).
 
-        Only the bounds check and address math run under the array lock;
-        member transfers (and their emulated bandwidth time) ride the
-        completion ring, so concurrent array-level reads — different zones,
-        different tenants — overlap instead of queuing behind one logical
-        read or a worker-pool's thread count. Safe
+        Only the bounds check, address math, and member submissions run
+        under the array lock; member transfers (and their emulated bandwidth
+        time) ride the completion ring, so concurrent array-level reads —
+        different zones, different tenants — overlap instead of queuing
+        behind one logical read or a worker-pool's thread count. Safe
         against concurrent appends because the logical write pointer only
         covers member blocks whose appends have fully landed (appends update
         it last, under this lock). Resetting + rewriting a zone while a read
@@ -338,85 +756,138 @@ class StripedZoneArray:
         out.flags.writeable = True     # sync caller an owned, mutable stream
         return out
 
+    def _read_jobs(self, zone_id: int, block_off: int,
+                   chunks: list[StripeChunk]) -> list:
+        """Scatter units for a striped read: direct member reads (coalesced
+        while member-locally contiguous — raid0's one-read-per-device fast
+        path falls out of this) plus one XOR-reconstruction job per dead-
+        member chunk. Caller holds the array lock."""
+        jobs: list = []
+        open_direct: dict[int, _DirectRead] = {}
+        for c in chunks:
+            dst = c.logical_off - block_off
+            if c.reconstruct:
+                jobs.append(self._xor_job(zone_id, c, dst))
+                continue
+            run = open_direct.get(c.device)
+            if run is not None and run.local_off + run.n_blocks == c.local_off:
+                run.copies.append((run.n_blocks, dst, c.n_blocks))
+                run.n_blocks += c.n_blocks
+            else:
+                run = _DirectRead(c.device, c.local_off, c.n_blocks,
+                                  [(0, dst, c.n_blocks)])
+                open_direct[c.device] = run
+                jobs.append(run)
+        return jobs
+
+    def _xor_job(self, zone_id: int, c: StripeChunk, dst: int) -> _XorReconstruct:
+        """Survivor reads + seed buffer reconstructing chunk ``c`` (xor mode,
+        its data member OFFLINE). Complete rows XOR the parity chunk with the
+        other data chunks; the tail row seeds from the host parity
+        accumulator (its parity chunk has not landed) and XORs out the
+        survivors' present spans. Caller holds the array lock."""
+        s, C = self.stripe_blocks, self.data_columns
+        a = c.local_off - c.row * s          # offset within the stripe row
+        data_devs, parity = self._row_devices(c.row)
+        reads: list[tuple[int, int, int]] = []
+        if self._wp[zone_id] >= (c.row + 1) * C * s:   # row complete
+            seed = np.zeros((c.n_blocks, self.block_bytes), np.uint8)
+            for c2, d in enumerate(data_devs):
+                if c2 != c.col:
+                    reads.append((d, c.local_off, c.n_blocks))
+            reads.append((parity, c.local_off, c.n_blocks))
+        else:
+            if zone_id in self._pacc_lost:
+                raise ZoneStateError(
+                    f"zone {zone_id} tail-row chunk {c.index} is "
+                    f"unrecoverable: its parity never landed and the "
+                    f"accumulator was recovered with a member already "
+                    f"offline (tail data lost)")
+            rem = self._wp[zone_id] - c.row * C * s
+            rc, partial = divmod(rem, s)
+            seed = self._pacc_for(zone_id)[a: a + c.n_blocks].copy()
+            for c2, d in enumerate(data_devs):
+                if c2 == c.col:
+                    continue
+                avail = s if c2 < rc else (partial if c2 == rc else 0)
+                n2 = min(c.n_blocks, max(0, avail - a))
+                if n2 > 0:
+                    reads.append((d, c.local_off, n2))
+        return _XorReconstruct(reads, seed, dst, c.n_blocks)
+
     def submit_read(self, zone_id: int, block_off: int, nblocks: int, *,
                     dtype: Optional[np.dtype | str] = None,
                     ring: Optional[CompletionRing] = None) -> IoFuture:
-        """Asynchronous striped read: one in-flight member transfer per
-        device, each gathered into logical stripe order as its completion
-        retires; the returned future retires with the last member's, valued
-        as the read-only interleaved extent (``dtype``-typed when given).
+        """Asynchronous striped read: in-flight member transfers gathered
+        into logical stripe order as their completions retire; the returned
+        future retires with the last member's, valued as the read-only
+        interleaved extent (``dtype``-typed when given). Chunks owned by an
+        OFFLINE member are served degraded — raid1 redirects to the mirror
+        partner, xor XORs the surviving row members — on the SAME completion
+        ring (no extra threads; reconstruction is completion-time work on
+        the gather pool).
 
-        Member transfers ride the completion ring, so a fan-out across N
-        members consumes N in-flight reactor slots and ZERO worker threads —
-        array concurrency is bounded by the emulated devices' zone clocks,
-        not by a pool size.
+        A member failing mid-fan-out fails the aggregate through the job
+        barrier: already-submitted member completions settle their slots as
+        they retire, the unsubmitted remainder settles with the error, so
+        the aggregate ALWAYS retires (no orphaned futures, no hanging
+        callers).
         """
         if dtype is not None:
             dtype = block_aligned_dtype(self.block_bytes, dtype)
         with self._lock:
             z = self.zone(zone_id)
-            if z.state == ZoneState.OFFLINE:
+            if z.state is ZoneState.OFFLINE:
                 raise ZoneStateError(f"logical zone {zone_id} is offline")
             if block_off < 0 or nblocks < 0 or block_off + nblocks > z.write_pointer:
                 raise OutOfBoundsError(
                     f"read [{block_off},{block_off + nblocks}) beyond write pointer "
                     f"{z.write_pointer} of logical zone {zone_id}"
                 )
-        agg = IoFuture(op="read", zone_id=zone_id, block_off=block_off,
-                       nblocks=nblocks, ring=ring)
-        out = np.empty((nblocks, self.block_bytes), np.uint8)
+            agg = IoFuture(op="read", zone_id=zone_id, block_off=block_off,
+                           nblocks=nblocks, ring=ring)
+            out = np.empty((nblocks, self.block_bytes), np.uint8)
 
-        def finalize():
-            with self._lock:
-                self._gather_bytes_copied += out.nbytes
-            flat = out.reshape(-1)
-            if dtype is not None:
-                flat = flat.view(dtype)
-            flat.flags.writeable = False
-            return flat
+            def finalize():
+                with self._lock:
+                    self._gather_bytes_copied += out.nbytes
+                flat = out.reshape(-1)
+                if dtype is not None:
+                    flat = flat.view(dtype)
+                flat.flags.writeable = False
+                return flat
 
-        if nblocks == 0:
-            agg.complete(finalize())
-            return agg
-        bidx = np.arange(block_off, block_off + nblocks)
-        chunk = bidx // self.stripe_blocks
-        owner = chunk % self.n_devices
-        local = (chunk // self.n_devices) * self.stripe_blocks \
-            + bidx % self.stripe_blocks
-
-        member_work: list[tuple[IoFuture, np.ndarray]] = []
-        for d, dev in enumerate(self.devices):
-            sel = owner == d
-            if not sel.any():
-                continue
-            lsel = local[sel]
-            member_work.append(
-                (dev.submit_read(zone_id, int(lsel[0]), int(lsel.size)), sel))
-        agg.service_seconds = max(f.service_seconds for f, _ in member_work)
-        barrier = CompletionBarrier(
-            len(member_work),
-            lambda _vals, err: agg.fail(err) if err is not None
-            else agg.complete(finalize()))
-        # Member completions firing inline (the non-emulated fast path) copy
-        # right on the submitting thread; completions retired by a reactor
-        # pump hand their copy to the gather pool — detected by thread, not
-        # by submission phase, so the pump NEVER memcpys even when a short
-        # emulated transfer retires mid-registration.
-        def on_member(f: IoFuture, sel: np.ndarray, i: int) -> None:
-            def gather_share() -> None:
-                # member view -> interleave copy at completion time: ONE
-                # host-side copy total per byte (the stripe gather IS the
-                # one unavoidable copy on the array path)
-                if f.error is None:
-                    out[sel] = f.value.reshape(-1, self.block_bytes)
-                barrier.settle(i, f.error)
-            if in_reactor_thread():
-                _gather_executor().submit(gather_share)
-            else:
-                gather_share()
-
-        for i, (f, sel) in enumerate(member_work):
-            f.add_done_callback(lambda f, sel=sel, i=i: on_member(f, sel, i))
+            if nblocks == 0:
+                agg.complete(finalize())
+                return agg
+            chunks = self._plan_chunks(zone_id, block_off, nblocks)
+            n_degraded = sum(1 for c in chunks if c.degraded)
+            if n_degraded:
+                self._degraded_reads += n_degraded
+            jobs = self._read_jobs(zone_id, block_off, chunks)
+            barrier = CompletionBarrier(
+                len(jobs),
+                lambda _vals, err: agg.fail(err) if err is not None
+                else agg.complete(finalize()))
+            submitted: list[tuple[int, object]] = []
+            service = 0.0
+            for ji, job in enumerate(jobs):
+                try:
+                    futs = job.submit(self, zone_id)
+                except BaseException as e:
+                    for rest in range(ji, len(jobs)):
+                        barrier.settle(rest, e)
+                    break
+                submitted.append((ji, job))
+                for f in futs:
+                    service = max(service, f.service_seconds)
+            agg.service_seconds = service
+        # attach OUTSIDE the lock: inline completions (the non-emulated fast
+        # path) then gather on the submitting thread without holding the
+        # array lock; reactor-retired completions route through the gather
+        # pool (detected by thread — the pump never memcpys)
+        for ji, job in submitted:
+            job.attach(self, out, barrier, ji)
         return agg
 
     def read_blocks_view(self, zone_id: int, block_off: int, nblocks: int) -> np.ndarray:
@@ -438,26 +909,115 @@ class StripedZoneArray:
         return self.read_blocks(zone_id, 0, self.zone(zone_id).write_pointer)
 
     # ---------------------------------------------------- zone management
+    def _set_write_pointer(self, zone_id: int, w: int) -> None:
+        """Distribute a logical write pointer across members (checkpoint
+        recovery): member ``d`` owns the blocks its mode maps there. Under
+        xor the parity members of full rows are assumed landed, and the
+        tail-row parity accumulator is recomputed from the surviving
+        members' data."""
+        s, C = self.stripe_blocks, self.data_columns
+        with self._lock:
+            full_rows, rem = divmod(int(w), s * C)
+            rem_chunks, partial = divmod(rem, s)
+
+            def tail(col: int) -> int:
+                if col < rem_chunks:
+                    return s
+                return partial if col == rem_chunks else 0
+
+            if self.redundancy == "raid0":
+                for c in range(C):
+                    self.devices[c].zone(zone_id).write_pointer = \
+                        full_rows * s + tail(c)
+            elif self.redundancy == "raid1":
+                for c in range(C):
+                    wp = full_rows * s + tail(c)
+                    self.devices[2 * c].zone(zone_id).write_pointer = wp
+                    self.devices[2 * c + 1].zone(zone_id).write_pointer = wp
+            else:
+                data_devs, _parity = self._row_devices(full_rows)
+                wps = [full_rows * s] * self.n_devices
+                for c in range(C):
+                    wps[data_devs[c]] += tail(c)
+                for d, wp in enumerate(wps):
+                    self.devices[d].zone(zone_id).write_pointer = wp
+            self._wp[zone_id] = int(w)
+            if self.redundancy == "xor":
+                acc = self._pacc_for(zone_id)
+                acc[:] = 0
+                self._pacc_lost.discard(zone_id)
+                for c in range(C):
+                    av = tail(c)
+                    if not av:
+                        continue
+                    dev = self.devices[data_devs[c]]
+                    if dev.zone(zone_id).state is ZoneState.OFFLINE:
+                        # the dead member's tail-row data cannot re-enter the
+                        # accumulator (its parity never landed): that span is
+                        # GONE — mark it so tail reconstruction raises instead
+                        # of silently returning zero bytes
+                        self._pacc_lost.add(zone_id)
+                        continue
+                    acc[:av] ^= dev.read_blocks(
+                        zone_id, full_rows * s, av).reshape(-1, self.block_bytes)
+
+    def _zone_transition(self, zone_id: int, what: str,
+                         fn: Callable[[ZonedDevice], None]) -> None:
+        """Array-wide zone state transition under the array lock (a
+        concurrent ``set_offline`` can no longer interleave mid-loop), with
+        the OFFLINE guard ``reset_zone`` always had. A member failing
+        mid-loop surfaces as :class:`ZoneStateError` naming the partial
+        state instead of silently leaving members mixed."""
+        with self._lock:
+            if self.zone(zone_id).state is ZoneState.OFFLINE:
+                raise ZoneStateError(f"logical zone {zone_id} is offline")
+            done = 0
+            try:
+                for dev in self.devices:
+                    if dev.zone(zone_id).state is ZoneState.OFFLINE:
+                        continue    # degraded survivors still transition
+                    fn(dev)
+                    done += 1
+            except ZNSError as e:
+                raise ZoneStateError(
+                    f"partial {what} of logical zone {zone_id}: {done}/"
+                    f"{self.n_devices} members transitioned before a member "
+                    f"refused: {e}"
+                ) from e
+
     def finish_zone(self, zone_id: int) -> None:
-        for dev in self.devices:
-            dev.finish_zone(zone_id)
+        self._zone_transition(zone_id, "finish",
+                              lambda dev: dev.finish_zone(zone_id))
 
     def set_read_only(self, zone_id: int) -> None:
-        for dev in self.devices:
-            dev.set_read_only(zone_id)
+        self._zone_transition(zone_id, "set_read_only",
+                              lambda dev: dev.set_read_only(zone_id))
 
     def reset_zone(self, zone_id: int) -> None:
         with self._lock:
-            if self.zone(zone_id).state == ZoneState.OFFLINE:
+            if self.zone(zone_id).state is ZoneState.OFFLINE:
                 raise ZoneStateError(f"logical zone {zone_id} is offline")
+            offline = self._offline_members(zone_id)
+            if offline:
+                raise ZoneStateError(
+                    f"logical zone {zone_id} degraded (members {offline} "
+                    f"offline): rebuild before reset")
             for dev in self.devices:
                 dev.reset_zone(zone_id)
+            self._wp[zone_id] = 0
+            self._fenced.discard(zone_id)
+            self._pacc_lost.discard(zone_id)
+            if zone_id in self._pacc:
+                self._pacc[zone_id][:] = 0
 
     def set_offline(self, zone_id: int, *, device: Optional[int] = None) -> None:
-        """Fault injection: kill the zone on one member (``device``) or all."""
-        targets = self.devices if device is None else [self.devices[device]]
-        for dev in targets:
-            dev.set_offline(zone_id)
+        """Fault injection: kill the zone on one member (``device``) or all.
+        Taken under the array lock so state transitions and read planning
+        see a consistent member-health snapshot."""
+        with self._lock:
+            targets = self.devices if device is None else [self.devices[device]]
+            for dev in targets:
+                dev.set_offline(zone_id)
 
     # --------------------------------------------------------------- misc
     def flush(self) -> None:
@@ -481,14 +1041,15 @@ class StripedZoneArray:
     @property
     def stats(self) -> dict:
         """Aggregate member device statistics (NVMe log-page analogue), plus
-        the array-level stripe gather copies."""
+        the array-level stripe gather copies and degraded-read count."""
         agg: dict[str, int] = {}
         for dev in self.devices:
             for k, v in dev.stats.items():
                 agg[k] = agg.get(k, 0) + v
         agg["bytes_copied"] = agg.get("bytes_copied", 0) + self._gather_bytes_copied
+        agg["degraded_reads"] = agg.get("degraded_reads", 0) + self._degraded_reads
         return agg
 
     def utilization(self) -> float:
-        written = sum(z.write_pointer for z in self.zones)
+        written = sum(self._wp)
         return written / float(self.num_zones * self.zone_blocks)

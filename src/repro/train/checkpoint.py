@@ -176,6 +176,7 @@ class ZonedCheckpointStore:
                 num_zones: int = 16,
                 member_zone_bytes: int = 64 * 1024 * 1024,
                 stripe_blocks: int = 256, keep: int = 2,
+                redundancy: str = "raid0",
                 ) -> "ZonedCheckpointStore":
         """Checkpoint store over a striped array of file-backed ZNS devices.
 
@@ -184,12 +185,17 @@ class ZonedCheckpointStore:
         save/restore bandwidth aggregates over every member, and a reopened
         store recovers the striped manifests exactly like the single-device
         path (the logical zone's write pointer distributes to the members).
+        With ``redundancy`` ``"raid1"`` or ``"xor"`` a checkpoint written
+        healthy restores bit-identically even after a member zone goes
+        OFFLINE mid-restore — the array reconstructs the dead member's
+        chunks from the mirror partner / the surviving row members on the
+        same completion ring the restore reads ride.
 
-        The array geometry is persisted to ``directory/array.json`` on first
-        use and ADOPTED on reopen — a stale geometry would de-interleave
-        member blocks in the wrong order and render every checkpoint
-        unreadable, so the sidecar, not the arguments, is the truth for an
-        existing store.
+        The array geometry (redundancy mode included) is persisted to
+        ``directory/array.json`` on first use and ADOPTED on reopen — a
+        stale geometry would de-interleave member blocks in the wrong order
+        and render every checkpoint unreadable, so the sidecar, not the
+        arguments, is the truth for an existing store.
         """
         directory = Path(directory)
         directory.mkdir(parents=True, exist_ok=True)
@@ -198,6 +204,7 @@ class ZonedCheckpointStore:
             "num_devices": num_devices, "num_zones": num_zones,
             "member_zone_bytes": member_zone_bytes,
             "stripe_blocks": stripe_blocks,
+            "redundancy": redundancy,
         }
         if sidecar.exists():
             geometry = json.loads(sidecar.read_text())
@@ -211,7 +218,9 @@ class ZonedCheckpointStore:
             for i in range(geometry["num_devices"])
         ]
         array = StripedZoneArray(devices,
-                                 stripe_blocks=geometry["stripe_blocks"])
+                                 stripe_blocks=geometry["stripe_blocks"],
+                                 redundancy=geometry.get("redundancy",
+                                                         "raid0"))
         return cls(device=array, keep=keep)
 
     # ----------------------------------------------------------- I/O routing
@@ -464,16 +473,24 @@ class ZonedCheckpointStore:
             # restore the manifest zone's write pointer after a reopen
             z.write_pointer = found_blocks
             z.state = ZoneState.OPEN
-        # restore payload zone write pointers from the surviving manifests
+        # restore payload zone write pointers from the surviving manifests —
+        # ONE assignment per zone (max over its entries), not one per entry:
+        # on a striped array the setter redistributes every member write
+        # pointer (and under xor re-reads the tail row into the parity
+        # accumulator), so per-entry assignment would repeat that work
+        # O(entries) times
+        ends: dict[int, int] = {}
         for m in self._manifests:
             for e in m["entries"]:
-                zid = e["zone"]
-                zz = self.device.zone(zid)
                 end = e["block"] + -(-e["bytes"] // bb)
-                if end > zz.write_pointer:
-                    zz.write_pointer = end
-                    if zz.state == ZoneState.EMPTY:
-                        zz.state = ZoneState.OPEN
+                if end > ends.get(e["zone"], 0):
+                    ends[e["zone"]] = end
+        for zid, end in ends.items():
+            zz = self.device.zone(zid)
+            if end > zz.write_pointer:
+                zz.write_pointer = end
+                if zz.state == ZoneState.EMPTY:
+                    zz.state = ZoneState.OPEN
 
     def latest_step(self) -> Optional[int]:
         return self._manifests[-1]["step"] if self._manifests else None

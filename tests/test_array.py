@@ -1,7 +1,10 @@
-"""CSD array subsystem: stripe round-trips, queue arbitration/backpressure,
-scheduler result-equivalence vs the single-device NvmCsd oracle for every
-OpCode terminal, and fault degradation when a member zone goes OFFLINE."""
+"""CSD array subsystem: stripe round-trips (all redundancy modes), queue
+arbitration/backpressure, scheduler result-equivalence vs the single-device
+NvmCsd oracle for every OpCode terminal, degraded-read reconstruction
+bit-identity under raid1/xor, and the fault paths: mid-fan-out member death,
+leaked-future regression, torn-append fencing, locked zone transitions."""
 import threading
+import time
 
 import numpy as np
 import pytest
@@ -30,16 +33,24 @@ from repro.core.programs import (
     histogram,
     select_records,
 )
-from repro.zns import OutOfBoundsError, ZonedDevice, ZoneFullError
+from repro.zns import (
+    OutOfBoundsError,
+    ZonedDevice,
+    ZoneFullError,
+    ZoneState,
+    ZoneStateError,
+)
 
 BLOCK = 4096
 STRIPE = 4
 
 
-def make_array(n_devices, *, num_zones=4, zone_kib=256, stripe=STRIPE):
+def make_array(n_devices, *, num_zones=4, zone_kib=256, stripe=STRIPE,
+               redundancy="raid0", **device_kw):
     devs = [ZonedDevice(num_zones=num_zones, zone_bytes=zone_kib * 1024,
-                        block_bytes=BLOCK) for _ in range(n_devices)]
-    return StripedZoneArray(devs, stripe_blocks=stripe)
+                        block_bytes=BLOCK, **device_kw)
+            for _ in range(n_devices)]
+    return StripedZoneArray(devs, stripe_blocks=stripe, redundancy=redundancy)
 
 
 def int32_blocks(n_blocks, seed=0, lo=-1000, hi=1000):
@@ -279,6 +290,338 @@ def test_scheduler_async_dispatcher_and_wait():
         sched.stop()
     assert all(c.ok for c in comps)
     assert all(int(c.value) == int(want) for c in comps)
+
+
+# ------------------------------------------------ redundancy & fault paths
+
+REDUNDANT = [("raid1", 2), ("raid1", 4), ("xor", 3), ("xor", 4)]
+
+
+@pytest.mark.parametrize("mode,n", REDUNDANT)
+def test_redundant_append_read_round_trip(mode, n):
+    arr = make_array(n, redundancy=mode)
+    data = int32_blocks(4 * STRIPE * arr.data_columns + 7)  # partial chunk
+    arr.zone_append(0, data)
+    back = np.frombuffer(arr.read_zone(0).tobytes(), np.int32)
+    assert np.array_equal(back, data)
+    # incremental appends interleave correctly too (exercises the xor
+    # tail-row parity accumulator across append boundaries)
+    arr2 = make_array(n, redundancy=mode)
+    parts = [int32_blocks(k, seed=10 + k) for k in (3, 1, 6, 2, 11)]
+    for p in parts:
+        arr2.zone_append(0, p)
+    want = np.concatenate(parts)
+    assert np.array_equal(
+        np.frombuffer(arr2.read_zone(0).tobytes(), np.int32), want)
+
+
+def test_redundancy_geometry_validation():
+    mk = lambda n: [ZonedDevice(num_zones=2, zone_bytes=64 * 1024,
+                                block_bytes=BLOCK) for _ in range(n)]
+    with pytest.raises(ValueError, match="even member count"):
+        StripedZoneArray(mk(3), stripe_blocks=4, redundancy="raid1")
+    with pytest.raises(ValueError, match=">= 3 members"):
+        StripedZoneArray(mk(2), stripe_blocks=4, redundancy="xor")
+    with pytest.raises(ValueError, match="redundancy"):
+        StripedZoneArray(mk(2), stripe_blocks=4, redundancy="raid6")
+    # capacity: raid1 halves, xor spends one member on parity
+    assert StripedZoneArray(mk(4), stripe_blocks=4,
+                            redundancy="raid1").zone_blocks == 2 * 16
+    assert StripedZoneArray(mk(4), stripe_blocks=4,
+                            redundancy="xor").zone_blocks == 3 * 16
+
+
+@pytest.mark.parametrize("mode,n", REDUNDANT)
+def test_degraded_read_bit_identical_for_every_dead_member(mode, n):
+    data = int32_blocks(37, seed=1)
+    per_block = BLOCK // 4
+    for dead in range(n):
+        arr = make_array(n, redundancy=mode)
+        arr.zone_append(0, data)
+        arr.set_offline(0, device=dead)
+        assert arr.zone(0).degraded
+        got = np.frombuffer(arr.read_blocks(0, 0, 37).tobytes(), np.int32)
+        assert np.array_equal(got, data), f"{mode} dead member {dead}"
+        for off, k in [(0, 1), (1, 5), (3, 17), (7, 16), (36, 1), (5, 32)]:
+            g = np.frombuffer(arr.read_blocks(0, off, k).tobytes(), np.int32)
+            assert np.array_equal(
+                g, data[off * per_block:(off + k) * per_block])
+        assert arr.stats["degraded_reads"] > 0, f"{mode} dead member {dead}"
+
+
+def test_raid0_offline_member_stays_fatal():
+    arr = make_array(3)
+    arr.zone_append(0, int32_blocks(12))
+    arr.set_offline(0, device=1)
+    assert arr.zone(0).state == ZoneState.OFFLINE
+    with pytest.raises(ZoneStateError):
+        arr.read_blocks(0, 0, 12)
+
+
+@pytest.mark.parametrize("mode,n", [("raid1", 2), ("xor", 3)])
+def test_degraded_reconstruction_rides_the_ring(mode, n):
+    """Emulated members: reconstruction reads are reactor-retired transfers
+    (no extra threads), and the reconstructed bytes stay bit-identical."""
+    arr = make_array(n, redundancy=mode, read_us_per_block=5.0)
+    data = int32_blocks(45, seed=2)
+    arr.zone_append(0, data)
+    arr.set_offline(0, device=0)
+    fut = arr.submit_read(0, 0, 45, dtype=np.int32)
+    assert np.array_equal(np.asarray(fut.result(timeout=20)), data)
+    assert arr.stats["degraded_reads"] > 0
+
+
+@pytest.mark.parametrize("mode,n", [("raid0", 2), ("raid1", 2), ("xor", 3)])
+def test_member_death_between_submit_and_completion(mode, n):
+    """A member going OFFLINE while its transfers are in flight must not
+    corrupt or hang them: the extent was snapshotted at submission (the ZNS
+    contract), so the aggregate retires with the correct bytes."""
+    arr = make_array(n, redundancy=mode, read_us_per_block=20.0)
+    data = int32_blocks(32, seed=3)
+    arr.zone_append(0, data)
+    fut = arr.submit_read(0, 0, 32, dtype=np.int32)
+    arr.set_offline(0, device=n - 1)          # dies mid-flight
+    assert np.array_equal(np.asarray(fut.result(timeout=20)), data)
+
+
+def test_raid1_round_robin_spreads_healthy_reads():
+    arr = make_array(2, redundancy="raid1")
+    arr.zone_append(0, int32_blocks(8 * STRIPE))
+    for d in arr.devices:
+        d.stats["blocks_read"] = 0
+    arr.read_zone(0)
+    reads = [d.stats["blocks_read"] for d in arr.devices]
+    assert all(r > 0 for r in reads), f"mirror pair not round-robined: {reads}"
+    assert sum(reads) == 8 * STRIPE           # each block read exactly once
+
+
+def test_xor_parity_chunk_is_xor_of_row_data():
+    """White-box: after full stripe rows land, the rotating parity member
+    holds the XOR of the row's data chunks."""
+    arr = make_array(3, redundancy="xor")
+    s, C = arr.stripe_blocks, arr.data_columns
+    data = int32_blocks(3 * C * s, seed=4)     # 3 complete rows
+    arr.zone_append(0, data)
+    blocks = np.frombuffer(data.tobytes(), np.uint8).reshape(-1, BLOCK)
+    for row in range(3):
+        data_devs, parity = arr._row_devices(row)
+        want = np.zeros((s, BLOCK), np.uint8)
+        for col, d in enumerate(data_devs):
+            chunk = row * C + col
+            want ^= blocks[chunk * s:(chunk + 1) * s]
+        got = arr.devices[parity].read_blocks(0, row * s, s)
+        assert np.array_equal(got.reshape(-1, BLOCK), want), f"row {row}"
+
+
+def test_unrecoverable_member_loss_goes_offline():
+    arr = make_array(4, redundancy="raid1")
+    arr.zone_append(0, int32_blocks(16))
+    arr.set_offline(0, device=0)
+    arr.set_offline(0, device=1)               # both partners of column 0
+    assert arr.zone(0).state == ZoneState.OFFLINE
+    with pytest.raises(ZoneStateError):
+        arr.read_blocks(0, 0, 16)
+    # offloads keep the PR 2 clean-error contract even past the redundancy
+    # limit: ArrayOffloadError, not a raw ZoneStateError
+    with pytest.raises(ArrayOffloadError, match="unrecoverable"):
+        OffloadScheduler(arr).nvm_cmd_bpf_run(filter_count("int32", "gt", 0), 0)
+    arr2 = make_array(3, redundancy="xor")
+    arr2.zone_append(0, int32_blocks(16))
+    arr2.set_offline(0, device=0)
+    arr2.set_offline(0, device=2)              # two dead under single parity
+    assert arr2.zone(0).state == ZoneState.OFFLINE
+
+
+def test_degraded_zone_is_read_only():
+    arr = make_array(2, redundancy="raid1")
+    data = int32_blocks(12, seed=5)
+    arr.zone_append(0, data)
+    arr.set_offline(0, device=1)
+    assert arr.zone(0).state == ZoneState.READ_ONLY
+    with pytest.raises(ZoneStateError):
+        arr.zone_append(0, int32_blocks(4))
+    with pytest.raises(ZoneStateError, match="rebuild"):
+        arr.reset_zone(0)
+    assert np.array_equal(
+        np.frombuffer(arr.read_zone(0).tobytes(), np.int32), data)
+
+
+def test_submit_read_mid_fanout_failure_fails_aggregate_not_hangs():
+    """Regression (leaked member futures): a member submit raising partway
+    through the fan-out must retire the aggregate with the error — never
+    orphan it."""
+    arr = make_array(3, read_us_per_block=10.0)
+    data = int32_blocks(24, seed=6)
+    arr.zone_append(0, data)
+
+    def boom(*a, **kw):
+        raise ZoneStateError("injected: member died between check and submit")
+
+    arr.devices[1].submit_read = boom
+    fut = arr.submit_read(0, 0, 24)
+    with pytest.raises(ZoneStateError, match="injected"):
+        fut.result(timeout=10)                 # retires with the error
+
+
+def test_submit_append_mid_fanout_failure_fails_and_fences():
+    arr = make_array(3, append_us_per_block=10.0)
+
+    def boom(*a, **kw):
+        raise ZoneStateError("injected append death")
+
+    arr.devices[1].submit_append = boom
+    fut = arr.submit_append(0, int32_blocks(24, seed=7))
+    with pytest.raises(ZoneStateError, match="injected"):
+        fut.result(timeout=10)
+    # member 0 landed its share, member 1 did not: the zone is torn — fenced
+    # READ_ONLY until reset, and the logical write pointer never advanced
+    assert arr.zone(0).write_pointer == 0
+    assert arr.zone(0).state == ZoneState.READ_ONLY
+    with pytest.raises(ZoneStateError):
+        arr.zone_append(0, int32_blocks(4))
+    del arr.devices[1].submit_append           # un-patch: reset recovers
+    arr.reset_zone(0)
+    assert arr.zone(0).is_writable
+    data = int32_blocks(8, seed=8)
+    arr.zone_append(0, data)
+    assert np.array_equal(
+        np.frombuffer(arr.read_zone(0).tobytes(), np.int32), data)
+
+
+def test_finish_zone_partial_transition_raises_zone_state_error():
+    """Regression (unlocked transitions): a member refusing a transition
+    mid-loop surfaces as ZoneStateError instead of silently leaving the
+    members in mixed states."""
+    arr = make_array(3)
+    arr.zone_append(0, int32_blocks(8))
+    arr.devices[2].set_read_only(0)            # member 2 will refuse FINISH
+    with pytest.raises(ZoneStateError, match="partial finish"):
+        arr.finish_zone(0)
+    # offline LOGICAL zone is guarded up front, like reset_zone
+    arr.set_offline(1)
+    with pytest.raises(ZoneStateError, match="offline"):
+        arr.finish_zone(1)
+    with pytest.raises(ZoneStateError, match="offline"):
+        arr.set_read_only(1)
+
+
+def test_finish_zone_on_degraded_array_transitions_survivors():
+    arr = make_array(2, redundancy="raid1")
+    arr.zone_append(0, int32_blocks(8, seed=9))
+    arr.set_offline(0, device=0)
+    arr.finish_zone(0)                         # survivors seal; no raise
+    assert arr.devices[1].zone(0).state == ZoneState.FULL
+    assert arr.devices[0].zone(0).state == ZoneState.OFFLINE
+
+
+def test_xor_recovery_with_dead_member_never_fabricates_tail_bytes():
+    """Regression: write-pointer recovery on an already-degraded xor array
+    cannot rebuild the tail-row parity accumulator (the dead member's tail
+    data is gone and its parity never landed) — tail reads must RAISE, not
+    return zero bytes; complete rows still reconstruct bit-identically."""
+    arr = make_array(3, redundancy="xor")
+    s, C = arr.stripe_blocks, arr.data_columns
+    data = int32_blocks(2 * C * s + 3, seed=14)     # 2 full rows + 3-block tail
+    arr.zone_append(0, data)
+    wp = arr.zone(0).write_pointer
+    # the tail row's first data chunk lives on a data member — kill it, then
+    # run the documented checkpoint-recovery path (write_pointer setter)
+    tail_dev = arr._row_devices(2)[0][0]
+    arr.set_offline(0, device=tail_dev)
+    arr.zone(0).write_pointer = wp
+    # complete rows: still exact
+    got = np.frombuffer(arr.read_blocks(0, 0, 2 * C * s).tobytes(), np.int32)
+    assert np.array_equal(got, data[: 2 * C * s * (BLOCK // 4)])
+    # tail row: lost for the dead member — loud error, never zeros
+    with pytest.raises(ZoneStateError, match="unrecoverable"):
+        arr.read_blocks(0, 0, wp)
+    # recovery while HEALTHY then losing the member stays exact (the
+    # accumulator was rebuilt from live members before the failure)
+    arr2 = make_array(3, redundancy="xor")
+    arr2.zone_append(0, data)
+    arr2.zone(0).write_pointer = wp
+    arr2.set_offline(0, device=arr2._row_devices(2)[0][0])
+    got = np.frombuffer(arr2.read_blocks(0, 0, wp).tobytes(), np.int32)
+    assert np.array_equal(got, data)
+
+
+def test_gather_pool_threads_are_daemonic():
+    arr = make_array(2, read_us_per_block=5.0)
+    arr.zone_append(0, int32_blocks(16))
+    arr.read_zone(0)                           # routes through the pool
+    gather = [t for t in threading.enumerate()
+              if t.name.startswith("stripe-gather")]
+    assert all(t.daemon for t in gather)
+
+
+# --------------------------------------- scheduler over degraded arrays
+
+@pytest.mark.parametrize("mode,n", [("raid1", 2), ("raid1", 4), ("xor", 3)])
+def test_scheduler_degraded_offload_bit_identical(mode, n):
+    """Acceptance: with one member zone OFFLINE, an offload over the
+    degraded array returns the same result as over a single device, and the
+    degraded fan-out is counted."""
+    data = int32_blocks(40, seed=11)
+    dev = ZonedDevice(num_zones=2, zone_bytes=1024 * 1024, block_bytes=BLOCK)
+    dev.zone_append(0, data)
+    csd = NvmCsd(dev)
+    arr = make_array(n, redundancy=mode, zone_kib=1024)
+    arr.zone_append(0, data)
+    sched = OffloadScheduler(arr)
+    for program in (filter_count("int32", "gt", 0),
+                    filter_sum("int32", "lt", 100),
+                    filter_select("int32", "gt", 900, 64)):
+        want, _ = csd.run_and_fetch(program, 0)
+        healthy, h_stats = sched.run_and_fetch(program, 0)
+        assert h_stats.degraded_reads == 0
+        arr.set_offline(0, device=0)
+        degraded, d_stats = sched.run_and_fetch(program, 0)
+        assert d_stats.degraded_reads > 0
+        for got in (healthy, degraded):
+            if isinstance(want, tuple):
+                assert np.array_equal(np.asarray(want[0]), np.asarray(got[0]))
+                assert int(want[1]) == int(got[1])
+            else:
+                assert np.array_equal(np.asarray(want), np.asarray(got))
+        # back to healthy for the next program's healthy pass
+        for z in range(arr.num_zones):
+            arr.devices[0].zones[z].state = ZoneState.OPEN \
+                if arr.devices[0].zones[z].write_pointer else ZoneState.EMPTY
+
+
+@pytest.mark.parametrize("tier", [CsdTier.INTERP, CsdTier.JIT, CsdTier.KERNEL])
+def test_scheduler_degraded_offload_all_tiers(tier):
+    data = int32_blocks(37, seed=12)           # partial tail chunk too
+    dev = ZonedDevice(num_zones=2, zone_bytes=1024 * 1024, block_bytes=BLOCK)
+    dev.zone_append(0, data)
+    program = filter_count("int32", "gt", 0)
+    want, _ = NvmCsd(dev).run_and_fetch(program, 0, tier=tier)
+    arr = make_array(3, redundancy="xor", zone_kib=1024)
+    arr.zone_append(0, data)
+    arr.set_offline(0, device=1)
+    got, stats = OffloadScheduler(arr).run_and_fetch(program, 0, tier=tier)
+    assert int(want) == int(got)
+    assert stats.degraded_reads > 0
+
+
+def test_scheduler_member_death_mid_command_recovers_on_redundant_array():
+    """Member dies while the fan-out is executing: redundant arrays redirect
+    or reconstruct the affected chunks and still return the exact result."""
+    data = int32_blocks(40, seed=13)
+    expected = int((data > 0).sum())
+    arr = make_array(2, redundancy="raid1", zone_kib=1024,
+                     read_us_per_block=50.0)
+    arr.zone_append(0, data)
+    sched = OffloadScheduler(arr)
+    program = filter_count("int32", "gt", 0)
+    sched.nvm_cmd_bpf_run(program, 0)          # warm: pays JIT
+    killer = threading.Timer(0.002, lambda: arr.set_offline(0, device=1))
+    killer.start()
+    try:
+        got, _ = sched.run_and_fetch(program, 0)
+    finally:
+        killer.join()
+    assert int(got) == expected
 
 
 def test_scheduler_multi_tenant_stats_history():

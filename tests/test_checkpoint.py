@@ -114,6 +114,7 @@ def test_elastic_restore_across_meshes():
     assert leaf.sharding.mesh.devices.shape == (2, 4)
 
 
+@pytest.mark.slow
 def test_preemption_exact_resume():
     """train 6 steps straight == train 3, 'crash', resume, train 3 more."""
     cfg = get_reduced("h2o-danube-1.8b")
@@ -145,3 +146,37 @@ def test_restore_missing_raises():
     store = small_store()
     with pytest.raises(CheckpointError):
         store.restore(like={})
+
+
+@pytest.mark.parametrize("redundancy,n", [("raid1", 2), ("xor", 3)])
+def test_striped_restore_survives_member_loss_mid_restore(tmp_path, redundancy, n):
+    """Acceptance: a checkpoint saved healthy restores bit-identically after
+    a member zone goes OFFLINE — including a loss injected while restore
+    reads are already in flight — and the redundancy mode survives reopen."""
+    rng = np.random.default_rng(7)
+    tree = {"w": rng.standard_normal((64, 64)).astype(np.float32),
+            "b": rng.integers(-5, 5, 4096, dtype=np.int64)}
+    like = {"w": np.zeros((64, 64), np.float32),
+            "b": np.zeros(4096, np.int64)}
+    store = ZonedCheckpointStore.striped(
+        tmp_path, num_devices=n, num_zones=6,
+        member_zone_bytes=64 * 4096, stripe_blocks=4, redundancy=redundancy)
+    store.save(3, tree)
+    store.flush()
+    # mid-restore member loss: reads in flight when the member dies
+    ticket = store.restore_async(like=like)
+    for z in range(store.device.num_zones):
+        store.device.devices[1].set_offline(z)
+    got = ticket.result(timeout=30)
+    assert np.array_equal(got["w"], tree["w"])
+    assert np.array_equal(got["b"], tree["b"])
+    # fully-degraded restore: every read planned AFTER the loss reconstructs
+    got2 = store.restore(like=like)
+    assert np.array_equal(got2["w"], tree["w"])
+    assert np.array_equal(got2["b"], tree["b"])
+    assert store.device.stats["degraded_reads"] > 0
+    # reopen adopts the redundancy mode from the array.json sidecar
+    reopened = ZonedCheckpointStore.striped(tmp_path)
+    assert reopened.device.redundancy == redundancy
+    got3 = reopened.restore(like=like)
+    assert np.array_equal(got3["w"], tree["w"])

@@ -109,6 +109,7 @@ def test_payload_as_uint8_coercions_agree():
 
 # ------------------------------------------------------- concurrency stress
 
+@pytest.mark.slow
 def test_per_zone_ordering_and_no_lost_completions_shared_zone():
     """N concurrent submitters over ONE zone: completions retire in virtual-
     deadline order (strictly increasing per zone), and none are lost."""
@@ -139,6 +140,7 @@ def test_per_zone_ordering_and_no_lost_completions_shared_zone():
     assert all(f.error is None for f in comps)
 
 
+@pytest.mark.slow
 def test_disjoint_zone_submitters_deterministic_vs_sync():
     """Concurrent submitters over DISJOINT zones: every completion carries
     exactly the bytes the synchronous path reads, and per-zone order holds."""
@@ -172,6 +174,7 @@ def test_disjoint_zone_submitters_deterministic_vs_sync():
         assert ds == sorted(ds), f"zone {z} completions out of order"
 
 
+@pytest.mark.slow
 def test_one_reactor_thread_drives_many_in_flight():
     """The tentpole claim: in-flight depth >> worker threads. 32 reads over
     32 zones from ONE submitter thread overlap on the reactor."""
