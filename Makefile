@@ -8,7 +8,7 @@
 PYTHONPATH := src:$(PYTHONPATH)
 export PYTHONPATH
 
-.PHONY: test test-all smoke ci bench bench-smoke
+.PHONY: test test-all smoke ci bench bench-smoke trace-smoke
 
 test:
 	python -m pytest -x -q -m "not slow"
@@ -29,8 +29,17 @@ smoke:
 # beat the serialized sequence. The degraded suite asserts the redundancy
 # tripwires: healthy raid1 reads beat the raid0 floor, degraded reads hold
 # the single-device floor, degraded offload results stay bit-identical.
+# The profile suite asserts the observability tripwires: >=90% wall-time
+# attribution on the traced fan-out, and disabled-tracing instrumentation
+# cost under 3% of the single-device offload row.
 bench-smoke:
-	python benchmarks/run.py --only filter,array,async,degraded --budget 120
+	python benchmarks/run.py --only filter,array,async,degraded,profile --budget 120
+
+# tiny traced offload, then validate the exported Chrome trace-event JSON
+# (Perfetto-loadable): the end-to-end check that virtual device tracks and
+# host spans land on one timeline
+trace-smoke:
+	python benchmarks/trace_smoke.py
 
 ci: test smoke
 

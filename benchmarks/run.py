@@ -2,17 +2,20 @@
 
 Prints ``name,us_per_call,derived`` CSV lines. Scaled-down sizes by default
 (CI-friendly on 1 CPU core); pass --full for the paper's exact 256 MiB zone.
-``--json`` additionally writes ``BENCH_hotpath.json`` (per-suite rows with
-parsed derived metrics) — plus ``BENCH_async.json`` for the async
-completion-ring suite and ``BENCH_degraded.json`` for the redundancy /
-degraded-read suite when they ran — so the perf trajectory is
-machine-readable across PRs; ``--budget SECONDS`` fails the run loudly when
-it exceeds a wall-clock budget — the CI tripwire for hot-path regressions.
+``--json`` additionally APPENDS a timestamped entry to the
+``BENCH_hotpath.json`` trajectory (per-suite rows with parsed derived
+metrics) — plus ``BENCH_async.json`` for the async completion-ring suite,
+``BENCH_degraded.json`` for the redundancy / degraded-read suite and
+``BENCH_profile.json`` for the traced fan-out profile when they ran — so
+the perf trajectory is machine-readable across PRs (legacy single-object
+files are migrated into trajectories on first write; see
+``benchmarks/trajectory.py``); ``--budget SECONDS`` fails the run loudly
+when it exceeds a wall-clock budget — the CI tripwire for hot-path
+regressions.
 """
 from __future__ import annotations
 
 import argparse
-import json
 import sys
 import time
 import traceback
@@ -20,6 +23,7 @@ import traceback
 JSON_PATH = "BENCH_hotpath.json"
 ASYNC_JSON_PATH = "BENCH_async.json"
 DEGRADED_JSON_PATH = "BENCH_degraded.json"
+PROFILE_JSON_PATH = "BENCH_profile.json"
 
 
 def _parse_derived(derived: str) -> dict:
@@ -57,7 +61,7 @@ def main() -> int:
     ap.add_argument("--only", default=None,
                     help="comma-separated subset: filter,hotpath,toolchain,"
                          "pushdown,checkpoint,paged_attn,roofline,array,"
-                         "async,degraded")
+                         "async,degraded,profile")
     ap.add_argument("--json", action="store_true",
                     help=f"write per-suite results to {JSON_PATH}")
     ap.add_argument("--budget", type=float, default=None,
@@ -66,8 +70,8 @@ def main() -> int:
 
     from benchmarks import (bench_array, bench_async, bench_checkpoint,
                             bench_degraded, bench_filter, bench_hotpath,
-                            bench_paged_attn, bench_pushdown, bench_toolchain,
-                            roofline)
+                            bench_paged_attn, bench_profile, bench_pushdown,
+                            bench_toolchain, roofline, trajectory)
 
     suites = {
         "filter": lambda: bench_filter.main(
@@ -80,6 +84,8 @@ def main() -> int:
             data_mib=16 if args.full else 8, runs=3 if args.full else 2),
         "degraded": lambda: bench_degraded.main(
             data_mib=16 if args.full else 8, runs=5 if args.full else 3),
+        "profile": lambda: bench_profile.main(
+            data_mib=64 if args.full else 16, runs=5 if args.full else 3),
         "toolchain": bench_toolchain.main,
         "pushdown": bench_pushdown.main,
         "checkpoint": bench_checkpoint.main,
@@ -113,18 +119,16 @@ def main() -> int:
             "elapsed_seconds": round(elapsed, 3),
             "full_sizes": bool(args.full),
         }
-        with open(JSON_PATH, "w") as f:
-            json.dump(payload, f, indent=2, sort_keys=True)
-        print(f"# wrote {JSON_PATH}", file=sys.stderr)
+        trajectory.append_entry(JSON_PATH, payload)
+        print(f"# appended to {JSON_PATH}", file=sys.stderr)
         for suite, path in (("async", ASYNC_JSON_PATH),
-                            ("degraded", DEGRADED_JSON_PATH)):
+                            ("degraded", DEGRADED_JSON_PATH),
+                            ("profile", PROFILE_JSON_PATH)):
             if suite not in results:
                 continue
-            with open(path, "w") as f:
-                json.dump({"suites": {suite: results[suite]},
-                           "full_sizes": bool(args.full)},
-                          f, indent=2, sort_keys=True)
-            print(f"# wrote {path}", file=sys.stderr)
+            trajectory.append_entry(path, {"suites": {suite: results[suite]},
+                                           "full_sizes": bool(args.full)})
+            print(f"# appended to {path}", file=sys.stderr)
 
     if args.budget is not None and elapsed > args.budget:
         print(f"# BUDGET EXCEEDED: {elapsed:.1f}s > {args.budget:.1f}s "

@@ -1,0 +1,92 @@
+"""Trace export smoke: one tiny traced offload, then validate the JSON.
+
+``make trace-smoke`` runs this. It exercises the full tracing path — device
+virtual-time events, dispatcher/worker host spans, Chrome export — on a
+deliberately tiny array offload, then checks the exported file is valid
+Chrome ``trace_event`` JSON (the schema Perfetto / chrome://tracing load):
+a ``traceEvents`` list whose entries carry name/ph/pid/tid/ts, complete
+events carry dur, and both the host (pid 1) and device virtual-time (pid 2)
+processes are present with metadata rows.
+"""
+from __future__ import annotations
+
+import json
+import sys
+
+import numpy as np
+
+from repro.array import OffloadScheduler, StripedZoneArray
+from repro.core import filter_count
+from repro.telemetry import trace as _trace
+from repro.zns import ZonedDevice
+
+OUT_PATH = "TRACE_smoke.json"
+DATA_BYTES = 1 * 1024 * 1024
+VALID_PHASES = {"X", "M", "i"}
+
+
+def run_traced_offload() -> int:
+    rng = np.random.default_rng(0)
+    data = rng.integers(0, 2**31 - 1, DATA_BYTES // 4, dtype=np.int32)
+    expected = int((data > 2**30).sum())
+    devices = [ZonedDevice(num_zones=1, zone_bytes=DATA_BYTES,
+                           block_bytes=4096, read_us_per_block=1.0)
+               for _ in range(2)]
+    with StripedZoneArray(devices, stripe_blocks=16) as array:
+        array.zone_append(0, data)
+        with OffloadScheduler(array) as sched:
+            program = filter_count("int32", "gt", 2**30)
+            sched.nvm_cmd_bpf_run(program, 0)      # warm-up outside the trace
+            _trace.clear()
+            with _trace.tracing(True):
+                sched.nvm_cmd_bpf_run(program, 0)
+            assert int(sched.nvm_cmd_bpf_result()) == expected
+    n = _trace.export_chrome(OUT_PATH)
+    _trace.clear()
+    return n
+
+
+def validate(path: str) -> dict:
+    with open(path) as f:
+        doc = json.load(f)
+    assert isinstance(doc, dict), "trace root must be an object"
+    evs = doc["traceEvents"]
+    assert isinstance(evs, list) and evs, "traceEvents missing or empty"
+    pids = set()
+    names = set()
+    n_complete = 0
+    for e in evs:
+        assert isinstance(e["name"], str) and e["name"]
+        assert e["ph"] in VALID_PHASES, f"unexpected phase {e['ph']!r}"
+        assert isinstance(e["pid"], int)
+        pids.add(e["pid"])
+        if e["ph"] == "M":
+            continue
+        assert isinstance(e["tid"], int)
+        assert isinstance(e["ts"], (int, float)) and e["ts"] >= 0
+        if e["ph"] == "X":
+            assert isinstance(e["dur"], (int, float)) and e["dur"] >= 0
+            n_complete += 1
+            names.add(e["name"])
+    assert {1, 2} <= pids, "host (pid 1) and device (pid 2) rows expected"
+    # the offload must have produced both host spans and device virtual time
+    assert "offload.execute" in names, f"no offload.execute span in {names}"
+    assert "dev.read" in names, f"no dev.read virtual event in {names}"
+    meta = [e for e in evs if e["ph"] == "M"]
+    assert any(m["name"] == "process_name" for m in meta)
+    assert doc["otherData"]["dropped_events"] == 0
+    return {"events": len(evs), "complete": n_complete,
+            "span_names": sorted(names)}
+
+
+def main() -> int:
+    n = run_traced_offload()
+    info = validate(OUT_PATH)
+    print(f"trace-smoke: wrote {OUT_PATH} ({n} events, "
+          f"{info['complete']} complete) — schema OK")
+    print(f"trace-smoke: spans: {', '.join(info['span_names'])}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,55 @@
+"""Append-only benchmark trajectories.
+
+``run.py --json`` used to overwrite each ``BENCH_*.json`` with the latest
+run, so the perf history across PRs lived only in git archaeology. Each
+file is now a trajectory document::
+
+    {"trajectory": [ {..payload.., "timestamp": "..."}, ... ]}
+
+Every ``--json`` run APPENDS a timestamped entry; a legacy single-object
+file (the pre-trajectory format: a bare ``{"suites": ...}`` payload) is
+migrated in place on first write by becoming the trajectory's first entry
+(with ``timestamp: null`` — its run time was never recorded).
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+__all__ = ["append_entry", "MAX_ENTRIES"]
+
+# bound the file size: benchmarks run per-PR, so 200 entries is years of
+# history; the oldest entries fall off first
+MAX_ENTRIES = 200
+
+
+def _load_trajectory(path: str) -> list[dict]:
+    if not os.path.exists(path):
+        return []
+    try:
+        with open(path) as f:
+            old = json.load(f)
+    except (json.JSONDecodeError, OSError):
+        return []   # corrupt file: start a fresh trajectory, don't crash CI
+    if isinstance(old, dict) and isinstance(old.get("trajectory"), list):
+        return old["trajectory"]
+    if isinstance(old, dict):
+        # legacy single-object payload -> first trajectory entry
+        old.setdefault("timestamp", None)
+        return [old]
+    return []
+
+
+def append_entry(path: str, payload: dict) -> dict:
+    """Append ``payload`` (timestamped now) to the trajectory at ``path``,
+    migrating a legacy single-object file on first write. Returns the full
+    document written."""
+    entry = dict(payload)
+    entry["timestamp"] = time.strftime("%Y-%m-%dT%H:%M:%S%z")
+    trajectory = _load_trajectory(path)
+    trajectory.append(entry)
+    doc = {"trajectory": trajectory[-MAX_ENTRIES:]}
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=2, sort_keys=True)
+    return doc

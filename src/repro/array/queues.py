@@ -32,6 +32,7 @@ from typing import Any, Callable, Optional, Sequence
 import numpy as np
 
 from repro.core.programs import Program
+from repro.telemetry.metrics import registry as _registry
 from repro.zns.ring import CompletionRing
 
 __all__ = [
@@ -76,6 +77,9 @@ class OffloadCommand:
     io_op: Optional[str] = None
     data: Optional[np.ndarray] = None
     on_complete: Optional[Callable[["Completion"], None]] = None
+    # monotonic instant the command entered its SQ; the arbiter derives WRR
+    # grant latency (SQ residency) from it
+    submitted_at: float = 0.0
 
 
 @dataclass
@@ -111,7 +115,8 @@ class SubmissionQueue:
 
     def submit(self, cmd: OffloadCommand, *, block: bool = False,
                timeout: Optional[float] = None) -> None:
-        deadline = None if timeout is None else time.monotonic() + timeout
+        t0 = time.monotonic()
+        deadline = None if timeout is None else t0 + timeout
         with self._cond:
             if len(self._q) >= self.depth and not block:
                 self.rejected += 1
@@ -128,8 +133,16 @@ class SubmissionQueue:
                     raise QueueFullError(
                         f"SQ '{self.tenant}' full after {timeout}s (depth="
                         f"{self.depth})")
+            now = time.monotonic()
+            cmd.submitted_at = now
             self._q.append(cmd)
             self.submitted += 1
+        # admission wait = backpressure the submitter ate before its slot
+        # opened (zero on the uncontended path); tenant names are a bounded
+        # set, so per-tenant series live on the global registry
+        _registry().histogram(
+            f"tenant.{self.tenant}.sq_admission_wait_seconds").observe(
+                now - t0)
 
     def pop(self) -> Optional[OffloadCommand]:
         with self._cond:
@@ -214,6 +227,11 @@ class WeightedRoundRobinArbiter:
                             self._credits[i] -= 1
                             if self._credits[i] == 0:
                                 self._pos = (i + 1) % n
+                            # WRR grant latency: how long the command sat in
+                            # its SQ before arbitration granted it a slot
+                            _registry().histogram(
+                                f"tenant.{pair.tenant}.wrr_grant_seconds"
+                            ).observe(time.monotonic() - cmd.submitted_at)
                             return cmd, pair
                     # empty queue forfeits its credit for this round
                     self._credits[i] = 0

@@ -46,6 +46,8 @@ from typing import Optional
 import numpy as np
 
 from repro.core.cache import CompiledProgramCache
+from repro.telemetry import trace as _trace
+from repro.telemetry.metrics import registry as _registry
 from repro.core.csd import (
     CsdTier,
     OffloadStats,
@@ -274,11 +276,17 @@ class OffloadScheduler:
         dtype = np.dtype(program.input_dtype)
         page_elems, n_pages = extent_geometry(
             self.array.block_bytes, dtype, n_blocks, self.pages_per_read)
-        insns_verified = verify_program(
-            program, page_elems=page_elems, n_pages=n_pages, limits=self.limits)
-        verify_zone_access(
-            zone_write_pointer=zone.write_pointer, block_off=block_off,
-            n_blocks=n_blocks)
+        t_v = time.perf_counter()
+        with _trace.span("offload.verify", tenant=tenant, zone=zone_id,
+                         program=program.name):
+            insns_verified = verify_program(
+                program, page_elems=page_elems, n_pages=n_pages,
+                limits=self.limits)
+            verify_zone_access(
+                zone_write_pointer=zone.write_pointer, block_off=block_off,
+                n_blocks=n_blocks)
+        _registry().histogram("sched.verify_seconds").observe(
+            time.perf_counter() - t_v)
         cmd = OffloadCommand(
             program=program, zone_id=zone_id, block_off=block_off,
             n_blocks=n_blocks,
@@ -367,13 +375,25 @@ class OffloadScheduler:
         if nxt is None:
             return False
         cmd, pair = nxt
+        if _trace.enabled() and cmd.submitted_at:
+            # SQ residency as a trace event on the tenant's own track —
+            # emitted post-hoc now that the interval is known
+            _trace.event_complete(
+                "offload.queued", cmd.submitted_at,
+                time.monotonic() - cmd.submitted_at,
+                track=f"tenant/{cmd.tenant}", tenant=cmd.tenant,
+                cmd=cmd.cmd_id)
         if cmd.io_op is not None:
             self._dispatch_io(cmd, pair)
             return True
         try:
-            value, stats = self._execute(cmd)
+            with _trace.span("offload.execute", tenant=cmd.tenant,
+                             tier=cmd.tier, zone=cmd.zone_id,
+                             program=cmd.program.name):
+                value, stats = self._execute(cmd)
             comp = Completion(cmd.cmd_id, cmd.tenant, value=value, stats=stats)
             self.history.append(stats)
+            self._publish_stats(stats)
         except Exception as e:  # surfaced via the CQ, never swallowed
             comp = Completion(cmd.cmd_id, cmd.tenant, error=e)
         self._finish(cmd, pair, comp)
@@ -397,6 +417,19 @@ class OffloadScheduler:
             Completion(cmd.cmd_id, cmd.tenant,
                        value=None if f.error is not None else f.value,
                        error=f.error)))
+
+    @staticmethod
+    def _publish_stats(stats: ArrayOffloadStats) -> None:
+        """Fold one command's ArrayOffloadStats into the global registry, so
+        ``metrics.registry().snapshot()`` shows the rolling offload picture
+        (commands, read/compute/overlap seconds, the latest overlap ratio)
+        next to the cache and gather-pool series."""
+        reg = _registry()
+        reg.counter("offload.commands").inc()
+        reg.histogram("offload.exec_seconds").observe(stats.exec_seconds)
+        reg.histogram("offload.read_seconds").observe(stats.read_seconds)
+        reg.histogram("offload.overlap_seconds").observe(stats.overlap_seconds)
+        reg.gauge("offload.overlap_ratio").set(stats.overlap_ratio)
 
     def _finish(self, cmd: OffloadCommand, pair: QueuePair,
                 comp: Completion) -> None:
@@ -540,42 +573,54 @@ class OffloadScheduler:
     def _execute(self, cmd: OffloadCommand) -> tuple[object, ArrayOffloadStats]:
         program, zone_id, tier = cmd.program, cmd.zone_id, cmd.tier
         array = self.array
-        try:
-            chunks = array.chunks(zone_id, cmd.block_off, cmd.n_blocks)
-        except ZNSError as e:
-            # the PR 2 clean-error contract: callers handle degraded/failed
-            # offloads via ArrayOffloadError, whether one raid0 member died
-            # or the loss defeated the redundancy mode entirely
-            raise ArrayOffloadError(
-                f"offload failed: zone {zone_id} unrecoverable under "
-                f"{array.redundancy}: {e}"
-            ) from e
-        by_dev: dict[int, list[StripeChunk]] = {}
-        for c in chunks:
-            by_dev.setdefault(c.device, []).append(c)
+        reg = _registry()
+        t_p = time.perf_counter()
+        with _trace.span("offload.plan"):
+            try:
+                chunks = array.chunks(zone_id, cmd.block_off, cmd.n_blocks)
+            except ZNSError as e:
+                # the PR 2 clean-error contract: callers handle degraded/
+                # failed offloads via ArrayOffloadError, whether one raid0
+                # member died or the loss defeated the redundancy mode
+                raise ArrayOffloadError(
+                    f"offload failed: zone {zone_id} unrecoverable under "
+                    f"{array.redundancy}: {e}"
+                ) from e
+            by_dev: dict[int, list[StripeChunk]] = {}
+            for c in chunks:
+                by_dev.setdefault(c.device, []).append(c)
+        reg.histogram("sched.plan_seconds").observe(time.perf_counter() - t_p)
 
         t0 = time.perf_counter()
-        futures = {
-            self._pool.submit(self._run_device_chunks, d, zone_id,
-                              dev_chunks, program, tier): d
-            for d, dev_chunks in by_dev.items()
-        }
-        per_chunk: dict[int, object] = {}
-        agg = _DeviceRun({})
-        errors: list[BaseException] = []
-        for fut in concurrent.futures.as_completed(futures):
-            try:
-                run = fut.result()
-            except ArrayOffloadError as e:
-                errors.append(e)
-                continue
-            per_chunk.update(run.vals)
-            agg.merge(run)
+        with _trace.span("offload.fanout", devices=len(by_dev),
+                         chunks=len(chunks)):
+            futures = {
+                self._pool.submit(self._run_device_chunks, d, zone_id,
+                                  dev_chunks, program, tier): d
+                for d, dev_chunks in by_dev.items()
+            }
+            per_chunk: dict[int, object] = {}
+            agg = _DeviceRun({})
+            errors: list[BaseException] = []
+            for fut in concurrent.futures.as_completed(futures):
+                try:
+                    run = fut.result()
+                except ArrayOffloadError as e:
+                    errors.append(e)
+                    continue
+                per_chunk.update(run.vals)
+                agg.merge(run)
+        reg.histogram("sched.fanout_seconds").observe(
+            time.perf_counter() - t0)
         if errors:
             raise errors[0]
 
-        ordered = [per_chunk[c.index] for c in chunks]
-        value = self._combine(program, ordered)
+        t_c = time.perf_counter()
+        with _trace.span("offload.combine"):
+            ordered = [per_chunk[c.index] for c in chunks]
+            value = self._combine(program, ordered)
+        reg.histogram("sched.combine_seconds").observe(
+            time.perf_counter() - t_c)
         # keep exec and JIT time disjoint, as NvmCsd reports them (compiles
         # happen inside the fan-out wall time on cache misses)
         exec_seconds = max(time.perf_counter() - t0 - agg.compile_s, 0.0)
@@ -601,6 +646,15 @@ class OffloadScheduler:
         return value, stats
 
     def _run_device_chunks(
+        self, dev_idx: int, zone_id: int, dev_chunks: list[StripeChunk],
+        program: Program, tier: str,
+    ) -> "_DeviceRun":
+        with _trace.span("worker.device", device=dev_idx,
+                         chunks=len(dev_chunks)):
+            return self._run_device_chunks_impl(
+                dev_idx, zone_id, dev_chunks, program, tier)
+
+    def _run_device_chunks_impl(
         self, dev_idx: int, zone_id: int, dev_chunks: list[StripeChunk],
         program: Program, tier: str,
     ) -> "_DeviceRun":
@@ -790,24 +844,40 @@ class OffloadScheduler:
         run.hits += int(hit)
         run.misses += int(not hit)
 
+        reg = _registry()
         for group, fut in zip(groups, futs):
-            if isinstance(fut, list):
-                pages = np.stack([f.result().reshape(chunk_pages, page_elems)
-                                  for f in fut])
-                run.read_s += sum(f.service_seconds for f in fut)
-            else:
-                pages = fut.result().reshape(len(group), chunk_pages,
-                                             page_elems)
-                # emulated transfer time of this group (the time the ring hid
-                # under earlier groups' execution; same meaning the thread-
-                # backed fetch wall-clock had)
-                run.read_s += fut.service_seconds
-            if len(group) != m_b:
-                pages = np.concatenate(
-                    [pages, np.zeros((m_b - len(group), chunk_pages,
-                                      page_elems), dtype)])
+            # read_wait = wall time this worker BLOCKED on the group's ring
+            # completion (zero when earlier groups' execution covered the
+            # transfer) — the number that grows if fan-out serializes on I/O
+            t_w = time.perf_counter()
+            with _trace.span("worker.read_wait", group=len(group)):
+                if isinstance(fut, list):
+                    raws = [f.result() for f in fut]
+                    run.read_s += sum(f.service_seconds for f in fut)
+                else:
+                    raw = fut.result()
+                    # emulated transfer time of this group (the time the ring
+                    # hid under earlier groups' execution; same meaning the
+                    # thread-backed fetch wall-clock had)
+                    run.read_s += fut.service_seconds
+            reg.histogram("sched.worker.read_wait_seconds").observe(
+                time.perf_counter() - t_w)
+            t_s = time.perf_counter()
+            with _trace.span("worker.stage"):
+                if isinstance(fut, list):
+                    pages = np.stack([r.reshape(chunk_pages, page_elems)
+                                      for r in raws])
+                else:
+                    pages = raw.reshape(len(group), chunk_pages, page_elems)
+                if len(group) != m_b:
+                    pages = np.concatenate(
+                        [pages, np.zeros((m_b - len(group), chunk_pages,
+                                          page_elems), dtype)])
+            reg.histogram("sched.worker.stage_seconds").observe(
+                time.perf_counter() - t_s)
             t0 = time.perf_counter()
-            out = jp(pages)
+            with _trace.span("worker.compute", group=len(group)):
+                out = jp(pages)
             if isinstance(out, tuple):
                 bufs, ns = (np.asarray(v) for v in out)
                 for i, c in enumerate(group):
@@ -816,7 +886,9 @@ class OffloadScheduler:
                 out = np.asarray(out)
                 for i, c in enumerate(group):
                     run.vals[c.index] = out[i]
-            run.compute_s += time.perf_counter() - t0
+            dt = time.perf_counter() - t0
+            run.compute_s += dt
+            reg.histogram("sched.worker.compute_seconds").observe(dt)
         return run
 
     # ----------------------------------------------------------- combiner

@@ -46,10 +46,13 @@ from __future__ import annotations
 import atexit
 import queue
 import threading
+import time
 from typing import Callable, Optional, Sequence
 
 import numpy as np
 
+from repro.telemetry import trace as _trace
+from repro.telemetry.metrics import MetricsRegistry, registry as _registry
 from repro.zns.device import (
     OutOfBoundsError,
     ZNSError,
@@ -99,7 +102,8 @@ class _GatherPool:
     def submit(self, fn: Callable[[], None]) -> None:
         with self._lock:
             if not self._closed:
-                self._q.put(fn)
+                _registry().counter("gather.jobs").inc()
+                self._q.put((fn, time.monotonic()))
                 if len(self._threads) < self._max:
                     t = threading.Thread(
                         target=self._work, daemon=True,
@@ -113,14 +117,24 @@ class _GatherPool:
         fn()
 
     def _work(self) -> None:
+        # queue-wait vs execute split is THE scaling-cliff discriminator for
+        # this pool: growing wait with flat exec means the 4 workers (or the
+        # queue hand-off) are the serialization point, not the memcpys
+        reg = _registry()
         while True:
-            fn = self._q.get()
-            if fn is None:
+            item = self._q.get()
+            if item is None:
                 return
+            fn, t_submit = item
+            t0 = time.monotonic()
+            reg.histogram("gather.queue_wait_seconds").observe(t0 - t_submit)
             try:
-                fn()
+                with _trace.span("gather.exec"):
+                    fn()
             except Exception:
                 pass  # gather closures settle their barrier slot themselves
+            reg.histogram("gather.exec_seconds").observe(
+                time.monotonic() - t0)
 
     def shutdown(self, timeout: float = 1.0) -> None:
         """Drain the workers (atexit): daemon threads would not block exit,
@@ -155,6 +169,7 @@ def _off_reactor(fn: Callable[[], None]) -> None:
     if in_reactor_thread():
         _gather_executor().submit(fn)
     else:
+        _registry().counter("gather.inline").inc()
         fn()
 
 
@@ -434,16 +449,18 @@ class StripedZoneArray:
         # parity never landed): tail reconstruction for these must raise,
         # never fabricate zero bytes
         self._pacc_lost: set[int] = set()
-        self._degraded_reads = 0
+        # array-level counters on a PRIVATE registry (arrays are unbounded;
+        # the process-global registry is reserved for singletons) — atomic,
+        # so the fan-out finalize path no longer re-takes the array lock
+        self.metrics = MetricsRegistry("array")
+        self._c_degraded_reads = self.metrics.counter("degraded_reads")
+        self._c_gather_bytes = self.metrics.counter("gather_bytes_copied")
         # member transfers fan out as in-flight completion-ring descriptors
         # (repro.zns.ring): an N-member read holds N reactor slots and ZERO
         # worker threads, and CONCURRENT logical reads (different zones /
         # tenants) overlap on the members' per-zone virtual clocks instead of
         # queuing behind a thread-pool's size.
         self.zones = [LogicalZone(self, z) for z in range(self.num_zones)]
-        # array-level host-copy accounting (member counters only see their
-        # own transfers; the stripe gather-copy happens here)
-        self._gather_bytes_copied = 0
 
     # -------------------------------------------------------- address math
     def _row_devices(self, row: int) -> tuple[list[int], int]:
@@ -849,8 +866,7 @@ class StripedZoneArray:
             out = np.empty((nblocks, self.block_bytes), np.uint8)
 
             def finalize():
-                with self._lock:
-                    self._gather_bytes_copied += out.nbytes
+                self._c_gather_bytes.inc(out.nbytes)
                 flat = out.reshape(-1)
                 if dtype is not None:
                     flat = flat.view(dtype)
@@ -863,7 +879,7 @@ class StripedZoneArray:
             chunks = self._plan_chunks(zone_id, block_off, nblocks)
             n_degraded = sum(1 for c in chunks if c.degraded)
             if n_degraded:
-                self._degraded_reads += n_degraded
+                self._c_degraded_reads.inc(n_degraded)
             jobs = self._read_jobs(zone_id, block_off, chunks)
             barrier = CompletionBarrier(
                 len(jobs),
@@ -1046,8 +1062,8 @@ class StripedZoneArray:
         for dev in self.devices:
             for k, v in dev.stats.items():
                 agg[k] = agg.get(k, 0) + v
-        agg["bytes_copied"] = agg.get("bytes_copied", 0) + self._gather_bytes_copied
-        agg["degraded_reads"] = agg.get("degraded_reads", 0) + self._degraded_reads
+        agg["bytes_copied"] = agg.get("bytes_copied", 0) + self._c_gather_bytes.value
+        agg["degraded_reads"] = agg.get("degraded_reads", 0) + self._c_degraded_reads.value
         return agg
 
     def utilization(self) -> float:

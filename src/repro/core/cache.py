@@ -25,9 +25,12 @@ sharing the process-wide cache. Hit/miss/eviction counts are host-visible
 from __future__ import annotations
 
 import threading
+import weakref
 from collections import OrderedDict
 from dataclasses import dataclass, field
 from typing import Callable, Hashable, Optional, Tuple
+
+from repro.telemetry.metrics import registry as _registry
 
 __all__ = ["CompiledProgramCache", "CacheStats", "default_cache",
            "DEFAULT_CACHE_CAPACITY"]
@@ -62,6 +65,11 @@ class _Build:
 class CompiledProgramCache:
     """Bounded, thread-safe LRU of compiled offload executables."""
 
+    # every live cache, so ONE metrics collector can aggregate them all
+    # (weak: a dropped cache must not be pinned by its own telemetry)
+    _instances: "weakref.WeakSet[CompiledProgramCache]" = weakref.WeakSet()
+    _instances_lock = threading.Lock()
+
     def __init__(self, capacity: int = DEFAULT_CACHE_CAPACITY):
         if capacity <= 0:
             raise ValueError("cache capacity must be positive")
@@ -72,6 +80,8 @@ class CompiledProgramCache:
         self._hits = 0
         self._misses = 0
         self._evictions = 0
+        with CompiledProgramCache._instances_lock:
+            CompiledProgramCache._instances.add(self)
 
     def get_or_build(self, key: Hashable,
                      builder: Callable[[], object]) -> Tuple[object, float, bool]:
@@ -138,6 +148,32 @@ class CompiledProgramCache:
         with self._lock:
             self._entries.clear()
 
+
+def _collect_cache_stats() -> dict:
+    """Aggregate hit/miss/eviction/size over every LIVE compile cache — the
+    ``compile_cache.*`` series of the global metrics snapshot (the ISSUE's
+    "one snapshot shows the whole offload picture")."""
+    hits = misses = evictions = size = 0
+    with CompiledProgramCache._instances_lock:
+        caches = list(CompiledProgramCache._instances)
+    for c in caches:
+        s = c.stats()
+        hits += s.hits
+        misses += s.misses
+        evictions += s.evictions
+        size += s.size
+    total = hits + misses
+    return {
+        "hits": hits,
+        "misses": misses,
+        "evictions": evictions,
+        "size": size,
+        "hit_rate": hits / total if total else 0.0,
+        "live_caches": len(caches),
+    }
+
+
+_registry().register_collector("compile_cache", _collect_cache_stats)
 
 _default: Optional[CompiledProgramCache] = None
 _default_lock = threading.Lock()

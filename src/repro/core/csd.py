@@ -29,6 +29,7 @@ import numpy as np
 
 from repro.core.cache import CompiledProgramCache
 from repro.core.prefetch import RingReader
+from repro.telemetry import trace as _trace
 from repro.core.programs import OpCode, Program
 from repro.core.verifier import VerifierLimits, verify_program, verify_zone_access
 from repro.core.vm import (
@@ -134,13 +135,16 @@ def execute_extent(
         # steps 2,3: device DMA of the zone extent into device DRAM — a typed
         # view of the backing buffer, not a host-side copy
         t_r = time.perf_counter()
-        pages = device.read_extent(zone_id, block_off, n_blocks,
-                                   dtype).reshape(n_pages, page_elems)
+        with _trace.span("tier.read", tier=tier, zone=zone_id,
+                         nblocks=n_blocks):
+            pages = device.read_extent(zone_id, block_off, n_blocks,
+                                       dtype).reshape(n_pages, page_elems)
         read_seconds = time.perf_counter() - t_r
         t0 = time.perf_counter()
-        value = jp(pages)
-        value = tuple(np.asarray(v) for v in value) if isinstance(value, tuple) \
-            else np.asarray(value)
+        with _trace.span("tier.compute", tier=tier, pages=n_pages):
+            value = jp(pages)
+            value = tuple(np.asarray(v) for v in value) \
+                if isinstance(value, tuple) else np.asarray(value)
         exec_seconds = time.perf_counter() - t0
         nbytes = (sum(v.nbytes for v in value) if isinstance(value, tuple)
                   else value.nbytes)
@@ -156,11 +160,14 @@ def execute_extent(
             ("kernel", program, n_pages, page_elems),
             lambda: zf_ops.kernel_program(program, n_pages, page_elems))
         t_r = time.perf_counter()
-        pages = device.read_extent(zone_id, block_off, n_blocks,
-                                   dtype).reshape(n_pages, page_elems)
+        with _trace.span("tier.read", tier=tier, zone=zone_id,
+                         nblocks=n_blocks):
+            pages = device.read_extent(zone_id, block_off, n_blocks,
+                                       dtype).reshape(n_pages, page_elems)
         read_seconds = time.perf_counter() - t_r
         t0 = time.perf_counter()
-        value = np.asarray(jp(pages))
+        with _trace.span("tier.compute", tier=tier, pages=n_pages):
+            value = np.asarray(jp(pages))
         exec_seconds = time.perf_counter() - t0
         return OffloadResult(value, value.nbytes, n_pages,
                              insns_bound, exec_seconds, compile_seconds,

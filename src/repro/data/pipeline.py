@@ -17,6 +17,7 @@ demonstrates the paper's thesis inside the training stack:
 """
 from __future__ import annotations
 
+import itertools
 import queue
 import threading
 import time
@@ -28,7 +29,10 @@ import numpy as np
 from repro.array import OffloadScheduler, StripedZoneArray
 from repro.core import CsdTier, NvmCsd, OffloadStats
 from repro.core.programs import Instruction, OpCode, Program
+from repro.telemetry.metrics import MetricsRegistry, StatsView
 from repro.zns import ZonedDevice
+
+_STORE_SEQ = itertools.count()
 
 __all__ = ["ZoneDataStore", "ZoneDataPipeline", "PrefetchLoader"]
 
@@ -60,8 +64,14 @@ class ZoneDataStore:
         # store-level host-copy accounting: the record staging buffer
         # (quality column + stride padding) is a host-side copy the device
         # counters never see — the data-path analogue of the checkpoint
-        # store's serialization accounting
-        self.stats = {"bytes_copied": 0, "bytes_viewed": 0}
+        # store's serialization accounting. Counters live on a private
+        # per-store registry; `stats` keeps its dict shape as a live view,
+        # and concurrent appenders increment atomically.
+        self.metrics = MetricsRegistry(f"data{next(_STORE_SEQ)}")
+        self._c_bytes_copied = self.metrics.counter("bytes_copied")
+        self._c_bytes_viewed = self.metrics.counter("bytes_viewed")
+        self.stats = StatsView({"bytes_copied": self._c_bytes_copied,
+                                "bytes_viewed": self._c_bytes_viewed})
 
     def append_records(self, zone_id: int, tokens: np.ndarray,
                        quality: Optional[np.ndarray] = None) -> int:
@@ -81,7 +91,7 @@ class ZoneDataStore:
             pad = np.zeros((n_pad, self.stride), np.int32)
             pad[:, 0] = -1                  # never passes quality >= 0
             flat = np.concatenate([flat, pad.reshape(-1)])
-        self.stats["bytes_copied"] += flat.nbytes   # staging copy to device
+        self._c_bytes_copied.inc(flat.nbytes)   # staging copy to device
         self.device.zone_append(zone_id, flat)
         self.records_written += n
         return n

@@ -18,6 +18,7 @@ model vLLM gets from PagedAttention, derived here from ZNS semantics.
 """
 from __future__ import annotations
 
+import itertools
 from dataclasses import dataclass, field
 from typing import Optional
 
@@ -26,6 +27,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.kernels.paged_attn.ops import paged_attention
+from repro.telemetry.metrics import MetricsRegistry, StatsView
+
+_POOL_SEQ = itertools.count()
 
 __all__ = ["KVZonePool", "KVZoneError"]
 
@@ -53,8 +57,15 @@ class KVZonePool:
         self.v = jnp.zeros((num_zones, zone_len, kv_heads, head_dim), dtype)
         self._free = list(range(num_zones))
         self._seqs: dict[int, _SeqState] = {}
-        self.stats = {"zones_allocated": 0, "zones_reset": 0,
-                      "tokens_appended": 0}
+        # pool counters on a private registry (pools are unbounded);
+        # `stats` keeps its dict shape as a live view
+        self.metrics = MetricsRegistry(f"kvpool{next(_POOL_SEQ)}")
+        self._c_alloc = self.metrics.counter("zones_allocated")
+        self._c_reset = self.metrics.counter("zones_reset")
+        self._c_tokens = self.metrics.counter("tokens_appended")
+        self.stats = StatsView({"zones_allocated": self._c_alloc,
+                                "zones_reset": self._c_reset,
+                                "tokens_appended": self._c_tokens})
 
     # ---------------------------------------------------------- lifecycle
     def add_sequence(self, seq_id: int) -> None:
@@ -69,7 +80,7 @@ class KVZonePool:
             return
         for z in st.zones:
             self._free.append(z)
-            self.stats["zones_reset"] += 1
+        self._c_reset.inc(len(st.zones))
 
     def _alloc_zone(self, st: _SeqState) -> int:
         if len(st.zones) >= self.max_zones_per_seq:
@@ -78,7 +89,7 @@ class KVZonePool:
             raise KVZoneError("zone pool exhausted (evict something)")
         z = self._free.pop(0)
         st.zones.append(z)
-        self.stats["zones_allocated"] += 1
+        self._c_alloc.inc()
         return z
 
     # ------------------------------------------------------------- append
@@ -92,7 +103,7 @@ class KVZonePool:
         self.k = self.k.at[z, slot].set(k_tok.astype(self.k.dtype))
         self.v = self.v.at[z, slot].set(v_tok.astype(self.v.dtype))
         st.length += 1
-        self.stats["tokens_appended"] += 1
+        self._c_tokens.inc()
 
     # ---------------------------------------------------------- attention
     def zone_table(self, seq_ids: list[int]) -> tuple[jnp.ndarray, jnp.ndarray]:

@@ -1,0 +1,33 @@
+"""Unified observability for the emulator: span tracing + metrics.
+
+Two halves, one import point:
+
+  * :mod:`repro.telemetry.trace` — lock-light span recorder on wall AND
+    reactor virtual time, exportable as Chrome ``trace_event`` JSON
+    (Perfetto-loadable). Off by default; ``trace.set_enabled(True)`` or the
+    ``tracing()`` context manager turn it on.
+  * :mod:`repro.telemetry.metrics` — counters/gauges/histograms with
+    snapshot/delta semantics. The global :func:`metrics.registry` aggregates
+    process-wide components (reactor, gather pool, tenant queues, compile
+    caches); per-instance components expose ``obj.metrics``.
+"""
+from . import metrics, trace
+from .metrics import (Counter, Gauge, Histogram, MetricsRegistry, StatsView,
+                      registry)
+from .trace import span, instant, event_complete, tracing, set_enabled
+
+__all__ = [
+    "metrics",
+    "trace",
+    "Counter",
+    "Gauge",
+    "Histogram",
+    "MetricsRegistry",
+    "StatsView",
+    "registry",
+    "span",
+    "instant",
+    "event_complete",
+    "tracing",
+    "set_enabled",
+]

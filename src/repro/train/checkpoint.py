@@ -36,8 +36,10 @@ from __future__ import annotations
 
 import bisect
 import hashlib
+import itertools
 import json
 import threading
+import time
 import weakref
 import zlib
 from pathlib import Path
@@ -47,11 +49,15 @@ import jax
 import numpy as np
 
 from repro.array import OffloadScheduler, StripedZoneArray
+from repro.telemetry import trace as _trace
+from repro.telemetry.metrics import MetricsRegistry, StatsView
 from repro.zns import CompletionBarrier, IoFuture, ZonedDevice, ZoneState
 
 __all__ = ["ZonedCheckpointStore", "CheckpointError", "CheckpointTicket"]
 
 MANIFEST_MAGIC = "zcsd-ckpt-v1"
+
+_STORE_SEQ = itertools.count()
 
 
 class CheckpointError(Exception):
@@ -136,8 +142,16 @@ class ZonedCheckpointStore:
         self.device = device
         self.keep = keep
         # store-level host-copy accounting (the device counters only see
-        # device-side moves; serialization/materialization happen here)
-        self.stats = {"bytes_copied": 0, "bytes_viewed": 0}
+        # device-side moves; serialization/materialization happen here).
+        # Stores are unbounded, so the series live on a private per-store
+        # registry; `stats` keeps its dict shape as a live view.
+        self.metrics = MetricsRegistry(f"ckpt{next(_STORE_SEQ)}")
+        self._c_bytes_copied = self.metrics.counter("bytes_copied")
+        self._c_bytes_viewed = self.metrics.counter("bytes_viewed")
+        self._h_save = self.metrics.histogram("save_seconds")
+        self._h_restore = self.metrics.histogram("restore_seconds")
+        self.stats = StatsView({"bytes_copied": self._c_bytes_copied,
+                                "bytes_viewed": self._c_bytes_viewed})
         self._mlock = threading.Lock()   # manifests list + placement state
         # blocks placed but whose append completion has not yet retired, per
         # zone: overlapping save_asyncs place against remaining_blocks MINUS
@@ -277,17 +291,23 @@ class ZonedCheckpointStore:
         record is durable. GC is deliberately NOT run here — call
         :meth:`gc` (or use :meth:`save`) from the training thread.
         """
+        t0 = time.monotonic()
         leaves, treedef = jax.tree_util.tree_flatten_with_path(tree)
         payloads: list[tuple[str, bytes, str, tuple]] = []
         crc = 0
         for path_, leaf in leaves:
             raw, dtype, shape = _leaf_to_bytes(leaf)
             crc = zlib.crc32(raw, crc)
-            self.stats["bytes_copied"] += len(raw)   # serialization staging
+            self._c_bytes_copied.inc(len(raw))   # serialization staging
             payloads.append((jax.tree_util.keystr(path_), raw, dtype, shape))
 
         ticket_fut = IoFuture(op="ckpt-save")
         n = len(payloads)
+        # barrier lifetime (serialization -> commit-record durable) as a span
+        # on the shared monotonic clock, so checkpoint saves line up against
+        # device/offload tracks in the exported trace
+        ticket_fut.add_done_callback(
+            lambda _f: self._observe_ticket("save", t0, step=step, leaves=n))
         entries: list[Optional[dict]] = [None] * n
         save_zones: list[int] = []   # uncommitted-zone guard, released at settle
 
@@ -355,6 +375,16 @@ class ZonedCheckpointStore:
                 # hanging (earlier leaves' completions drain normally)
                 on_payload(i, e, None)
         return CheckpointTicket(ticket_fut)
+
+    def _observe_ticket(self, op: str, t0: float, **tags) -> None:
+        """Record one async ticket's barrier lifetime (submission entry to
+        last completion retired) — runs on whichever thread settles the
+        final transfer, so it must stay allocation-light."""
+        dt = time.monotonic() - t0
+        (self._h_save if op == "save" else self._h_restore).observe(dt)
+        if _trace.enabled():
+            _trace.event_complete(f"ckpt.{op}", t0, dt, track="checkpoint",
+                                  **tags)
 
     def _release_pins(self, zones: list[int]) -> None:
         with self._mlock:
@@ -443,9 +473,9 @@ class ZonedCheckpointStore:
             z.write_pointer = 0
         else:
             raw = self.device.read_blocks_view(0, 0, z.write_pointer)
-        self.stats["bytes_viewed"] += raw.nbytes
+        self._c_bytes_viewed.inc(raw.nbytes)
         buf = raw.tobytes()    # the one copy: bytes for the header parser
-        self.stats["bytes_copied"] += len(buf)
+        self._c_bytes_copied.inc(len(buf))
         off = 0
         found_blocks = 0
         while off + 40 <= len(buf):
@@ -534,6 +564,7 @@ class ZonedCheckpointStore:
         caller's thread at ``result()`` time."""
         if like is None:
             raise CheckpointError("restore requires `like` for the treedef")
+        t0 = time.monotonic()
         ticket_fut = IoFuture(op="ckpt-restore")
         # Manifest lookup and source-zone pinning happen under ONE _mlock
         # critical section: gc() also sweeps under it, so there is no window
@@ -575,11 +606,11 @@ class ZonedCheckpointStore:
             try:
                 for e, raw in zip(entries, raw_parts):
                     raw = np.asarray(raw).reshape(-1)[: e["bytes"]]
-                    self.stats["bytes_viewed"] += raw.nbytes
+                    self._c_bytes_viewed.inc(raw.nbytes)
                     crc = zlib.crc32(raw, crc)
                     arrays.append(
                         _leaf_from_bytes(raw, e["dtype"], tuple(e["shape"])))
-                    self.stats["bytes_copied"] += arrays[-1].nbytes
+                    self._c_bytes_copied.inc(arrays[-1].nbytes)
             finally:
                 # every leaf is now an owned copy (or we are failing): the
                 # device zones may be recycled
@@ -606,6 +637,9 @@ class ZonedCheckpointStore:
                               barrier.settle(i, err, value))
             except BaseException as err:
                 barrier.settle(i, err)   # settle the leaf; ticket fails loudly
+        ticket_fut.add_done_callback(
+            lambda _f: self._observe_ticket(
+                "restore", t0, step=manifest["step"], leaves=len(entries)))
         ticket = CheckpointTicket(ticket_fut, finalize)
         # abandoned ticket (e.g. result() timed out and the caller moved on):
         # the pins must not outlive it, or gc could never reclaim the zones

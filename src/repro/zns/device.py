@@ -25,6 +25,7 @@ NVMe-style asynchronous interface the paper's device sits behind).
 from __future__ import annotations
 
 import enum
+import itertools
 import threading
 import time
 import weakref
@@ -34,6 +35,8 @@ from typing import Optional
 
 import numpy as np
 
+from repro.telemetry import trace as _trace
+from repro.telemetry.metrics import MetricsRegistry, StatsView
 from repro.zns.ring import CompletionRing, IoFuture, IoReactor
 
 __all__ = [
@@ -142,6 +145,9 @@ class Zone:
         return self.state in (ZoneState.EMPTY, ZoneState.OPEN)
 
 
+_DEV_SEQ = itertools.count()  # stable per-process device ordinals for traces
+
+
 class ZonedDevice:
     """An emulated ZNS SSD: ``num_zones`` zones of ``zone_blocks`` blocks of
     ``block_bytes`` bytes.
@@ -193,15 +199,32 @@ class ZonedDevice:
         # device-level statistics (host-visible, like NVMe log pages);
         # bytes_copied/bytes_viewed account host-side data movement: the copy
         # path duplicates the extent into host memory, the view path hands out
-        # an alias of the backing buffer (zero host copies).
-        self.stats = {
-            "blocks_read": 0,
-            "blocks_appended": 0,
-            "zone_resets": 0,
-            "zone_finishes": 0,
-            "bytes_copied": 0,
-            "bytes_viewed": 0,
-        }
+        # an alias of the backing buffer (zero host copies). Backed by the
+        # telemetry registry — devices exist in unbounded numbers (tests make
+        # thousands), so each owns a PRIVATE registry rather than polluting
+        # the process-global one; ``stats`` keeps the legacy dict shape.
+        self.dev_ordinal = next(_DEV_SEQ)
+        self.metrics = MetricsRegistry(f"dev{self.dev_ordinal}")
+        self._c_blocks_read = self.metrics.counter("blocks_read")
+        self._c_blocks_appended = self.metrics.counter("blocks_appended")
+        self._c_zone_resets = self.metrics.counter("zone_resets")
+        self._c_zone_finishes = self.metrics.counter("zone_finishes")
+        self._c_bytes_copied = self.metrics.counter("bytes_copied")
+        self._c_bytes_viewed = self.metrics.counter("bytes_viewed")
+        self.stats = StatsView({
+            "blocks_read": self._c_blocks_read,
+            "blocks_appended": self._c_blocks_appended,
+            "zone_resets": self._c_zone_resets,
+            "zone_finishes": self._c_zone_finishes,
+            "bytes_copied": self._c_bytes_copied,
+            "bytes_viewed": self._c_bytes_viewed,
+        })
+        # Service/queue-wait distributions for emulated (timed) transfers
+        # only — the zero-service fast path stays metric-free.
+        self._h_read_service = self.metrics.histogram("read.service_seconds")
+        self._h_read_wait = self.metrics.histogram("read.wait_seconds")
+        self._h_append_service = self.metrics.histogram("append.service_seconds")
+        self._h_append_wait = self.metrics.histogram("append.wait_seconds")
 
     # ------------------------------------------------------------------ zones
     def zone(self, zone_id: int) -> Zone:
@@ -245,7 +268,7 @@ class ZonedDevice:
             z.write_pointer += nblocks
             if z.write_pointer == z.capacity_blocks:
                 z.state = ZoneState.FULL
-            self.stats["blocks_appended"] += nblocks
+            self._c_blocks_appended.inc(nblocks)
             return z, start_rel, nblocks
 
     def zone_append(self, zone_id: int, data: np.ndarray | bytes) -> int:
@@ -260,7 +283,7 @@ class ZonedDevice:
         with self._lock:
             z, start_rel, nblocks = self._do_append(zone_id, data)
             deadline, service = self._claim_slot(
-                z, nblocks, self.append_us_per_block)
+                z, nblocks, self.append_us_per_block, op="append")
         self._sleep_until(deadline, service)
         return start_rel
 
@@ -280,13 +303,14 @@ class ZonedDevice:
             fut.submitted_block = start_rel
             fut._value = start_rel
             deadline, service = self._claim_slot(
-                z, nblocks, self.append_us_per_block, fut)
+                z, nblocks, self.append_us_per_block, fut, op="append")
             fut.service_seconds = service
         return self.reactor.schedule(fut, deadline)
 
     # ------------------------------------------------------------------- read
     def _claim_slot(self, z: Zone, nblocks: int, us_per_block: float,
-                    fut: Optional[IoFuture] = None) -> tuple[float, float]:
+                    fut: Optional[IoFuture] = None,
+                    op: str = "read") -> tuple[float, float]:
         """Reserve this transfer's slot in the zone's virtual-time queue.
 
         Returns ``(completion_deadline, service_seconds)``. Same-zone
@@ -314,6 +338,21 @@ class ZonedDevice:
             if fut is not None:
                 fut._prev = z.io_tail() if z.io_tail is not None else None
                 z.io_tail = weakref.ref(fut)
+        if op == "read":
+            self._h_read_service.observe(service)
+            self._h_read_wait.observe(start - now)
+        else:
+            self._h_append_service.observe(service)
+            self._h_append_wait.observe(start - now)
+        if _trace.enabled():
+            # Device VIRTUAL time: the transfer occupies the zone's die for
+            # [start, start+service) on the monotonic clock — emit it now,
+            # before it elapses, onto the device's own trace track.
+            _trace.event_complete(
+                f"dev.{op}", start, service,
+                track=f"dev{self.dev_ordinal}/z{z.zone_id}",
+                zone=z.zone_id, nblocks=nblocks,
+                wait_us=round((start - now) * 1e6, 1))
         return deadline, service
 
     @staticmethod
@@ -344,14 +383,14 @@ class ZonedDevice:
                 )
             off = (z.start_lba + block_off) * self.block_bytes
             span = self._buf[off : off + nblocks * self.block_bytes]
-            self.stats["blocks_read"] += nblocks
+            self._c_blocks_read.inc(nblocks)
             if copy:
                 span = np.array(span)
-                self.stats["bytes_copied"] += span.nbytes
+                self._c_bytes_copied.inc(span.nbytes)
             else:
                 span = span.view()
                 span.flags.writeable = False
-                self.stats["bytes_viewed"] += span.nbytes
+                self._c_bytes_viewed.inc(span.nbytes)
             return z, span
 
     def read_blocks(self, zone_id: int, block_off: int, nblocks: int) -> np.ndarray:
@@ -442,7 +481,7 @@ class ZonedDevice:
             if z.state not in (ZoneState.EMPTY, ZoneState.OPEN, ZoneState.FULL):
                 raise ZoneStateError(f"cannot finish zone in state {z.state}")
             z.state = ZoneState.FULL
-            self.stats["zone_finishes"] += 1
+            self._c_zone_finishes.inc()
 
     def set_read_only(self, zone_id: int) -> None:
         with self._lock:
@@ -461,7 +500,7 @@ class ZonedDevice:
             z.write_pointer = 0
             z.state = ZoneState.EMPTY
             z.reset_count += 1
-            self.stats["zone_resets"] += 1
+            self._c_zone_resets.inc()
 
     def set_offline(self, zone_id: int) -> None:
         """Fault injection: mark a zone dead (used by fault-tolerance tests)."""

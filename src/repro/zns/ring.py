@@ -38,6 +38,8 @@ import time
 from collections import deque
 from typing import Callable, Optional
 
+from repro.telemetry import metrics as _metrics
+
 __all__ = ["IoFuture", "IoReactor", "CompletionRing", "CompletionBarrier",
            "in_reactor_thread"]
 
@@ -300,6 +302,14 @@ class IoReactor:
         with cls._default_lock:
             if cls._default is None:
                 cls._default = cls()
+                # the default reactor is THE process-wide pump — surface its
+                # occupancy in the global metrics snapshot
+                r = cls._default
+                _metrics.registry().register_collector("reactor", lambda: {
+                    "in_flight": r.in_flight,
+                    "max_in_flight": r.max_in_flight,
+                    "retired": r.retired,
+                })
             return cls._default
 
     @property
@@ -357,6 +367,13 @@ class IoReactor:
                     self._cond.wait(timeout=wait)
                     continue
                 self.retired += len(due)
+            # Deadline slip = how late the pump retired each completion past
+            # its emulated deadline — the reactor's own serialization signal.
+            # Fetched per batch (not cached) so a registry reset in tests
+            # cannot orphan the series.
+            h = _metrics.registry().histogram("reactor.slip_seconds")
+            for fut in due:
+                h.observe(now - fut.deadline)
             for fut in due:           # outside the lock: callbacks may submit
                 fut._retire()
 
