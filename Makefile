@@ -8,7 +8,7 @@
 PYTHONPATH := src:$(PYTHONPATH)
 export PYTHONPATH
 
-.PHONY: test test-all smoke ci bench bench-smoke trace-smoke
+.PHONY: test test-all smoke ci bench bench-smoke trace-smoke lint bench-report
 
 test:
 	python -m pytest -x -q -m "not slow"
@@ -19,7 +19,7 @@ test-all:
 	python -m pytest -x -q
 
 smoke:
-	python benchmarks/run.py --only filter,array,hotpath,async,degraded --json
+	python benchmarks/run.py --only filter,array,hotpath,async,degraded,health --json
 
 # hot-path regression tripwire: the CI-size suites must fit the wall-clock
 # budget (measured ~10s on 2 cores incl. compiles; ~9x headroom so only a
@@ -31,9 +31,12 @@ smoke:
 # the single-device floor, degraded offload results stay bit-identical.
 # The profile suite asserts the observability tripwires: >=90% wall-time
 # attribution on the traced fan-out, and disabled-tracing instrumentation
-# cost under 3% of the single-device offload row.
+# cost under 3% of the single-device offload row. The health suite asserts
+# the injected-fault pipeline end to end (SMART counters -> SUSPECT event
+# -> DEGRADED alert + callback -> per-tenant degraded-read accounting) and
+# the event-log publish cost under 3% of the single-device read row.
 bench-smoke:
-	python benchmarks/run.py --only filter,array,async,degraded,profile --budget 120
+	python benchmarks/run.py --only filter,array,async,degraded,profile,health --budget 120
 
 # tiny traced offload, then validate the exported Chrome trace-event JSON
 # (Perfetto-loadable): the end-to-end check that virtual device tracks and
@@ -41,7 +44,20 @@ bench-smoke:
 trace-smoke:
 	python benchmarks/trace_smoke.py
 
-ci: test smoke
+# static checks when the linter is available; the container image does not
+# guarantee ruff, so its absence skips (loudly) rather than failing CI
+lint:
+	@if command -v ruff >/dev/null 2>&1; then \
+		ruff check src benchmarks tests; \
+	else \
+		echo "ruff not installed; skipping lint"; \
+	fi
+
+# latest-vs-best across every checked-in benchmark trajectory
+bench-report:
+	python benchmarks/trajectory.py
+
+ci: lint test smoke trace-smoke
 
 bench:
 	python benchmarks/run.py

@@ -24,6 +24,7 @@ JSON_PATH = "BENCH_hotpath.json"
 ASYNC_JSON_PATH = "BENCH_async.json"
 DEGRADED_JSON_PATH = "BENCH_degraded.json"
 PROFILE_JSON_PATH = "BENCH_profile.json"
+HEALTH_JSON_PATH = "BENCH_health.json"
 
 
 def _parse_derived(derived: str) -> dict:
@@ -61,7 +62,9 @@ def main() -> int:
     ap.add_argument("--only", default=None,
                     help="comma-separated subset: filter,hotpath,toolchain,"
                          "pushdown,checkpoint,paged_attn,roofline,array,"
-                         "async,degraded,profile")
+                         "async,degraded,profile,health")
+    ap.add_argument("--list", action="store_true",
+                    help="print the available suite names and exit")
     ap.add_argument("--json", action="store_true",
                     help=f"write per-suite results to {JSON_PATH}")
     ap.add_argument("--budget", type=float, default=None,
@@ -69,9 +72,10 @@ def main() -> int:
     args = ap.parse_args()
 
     from benchmarks import (bench_array, bench_async, bench_checkpoint,
-                            bench_degraded, bench_filter, bench_hotpath,
-                            bench_paged_attn, bench_profile, bench_pushdown,
-                            bench_toolchain, roofline, trajectory)
+                            bench_degraded, bench_filter, bench_health,
+                            bench_hotpath, bench_paged_attn, bench_profile,
+                            bench_pushdown, bench_toolchain, roofline,
+                            trajectory)
 
     suites = {
         "filter": lambda: bench_filter.main(
@@ -86,13 +90,24 @@ def main() -> int:
             data_mib=16 if args.full else 8, runs=5 if args.full else 3),
         "profile": lambda: bench_profile.main(
             data_mib=64 if args.full else 16, runs=5 if args.full else 3),
+        "health": lambda: bench_health.main(
+            data_mib=8 if args.full else 4, runs=5 if args.full else 3),
         "toolchain": bench_toolchain.main,
         "pushdown": bench_pushdown.main,
         "checkpoint": bench_checkpoint.main,
         "paged_attn": bench_paged_attn.main,
         "roofline": roofline.main,
     }
+    if args.list:
+        for name in suites:
+            print(name)
+        return 0
     chosen = args.only.split(",") if args.only else list(suites)
+    unknown = [n for n in chosen if n not in suites]
+    if unknown:
+        print(f"unknown suite(s): {', '.join(unknown)} "
+              f"(try --list)", file=sys.stderr)
+        return 2
 
     t0 = time.perf_counter()
     print("name,us_per_call,derived")
@@ -123,7 +138,8 @@ def main() -> int:
         print(f"# appended to {JSON_PATH}", file=sys.stderr)
         for suite, path in (("async", ASYNC_JSON_PATH),
                             ("degraded", DEGRADED_JSON_PATH),
-                            ("profile", PROFILE_JSON_PATH)):
+                            ("profile", PROFILE_JSON_PATH),
+                            ("health", HEALTH_JSON_PATH)):
             if suite not in results:
                 continue
             trajectory.append_entry(path, {"suites": {suite: results[suite]},

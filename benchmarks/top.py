@@ -1,0 +1,226 @@
+"""zcsd-top: a live terminal dashboard over the telemetry stack.
+
+Renders the operator's view of an emulated array the way ``iostat``/``ztop``
+would: per-member SMART health, per-tenant QoS (bytes / ops / p50 / p99 /
+degraded reads, straight off the global registry's ``tenant.*`` series),
+currently-active alerts, and the tail of the structured event log — one
+refreshing frame per interval.
+
+The renderer is a pure function (:func:`render`) over whatever monitors /
+engine / log the caller hands it, so tests can assert on a frame without a
+terminal. Run as a script it drives a demo workload — a two-member raid1
+array serving two tenants, with a member zone killed partway through — so
+every pane has something to show::
+
+    PYTHONPATH=src python benchmarks/top.py              # live, ctrl-C to quit
+    PYTHONPATH=src python benchmarks/top.py --once       # single frame (CI)
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import threading
+import time
+
+import numpy as np
+
+from repro.telemetry import (
+    AlertEngine,
+    ArrayHealthMonitor,
+    ErrorRateRule,
+    HealthPromotionRule,
+    TenantLatencySLORule,
+    event_log,
+    registry,
+)
+
+_STATUS_GLYPH = {"HEALTHY": "ok", "SUSPECT": "??", "DEGRADED": "!!",
+                 "OFFLINE": "XX"}
+
+
+def _fmt_bytes(n: float) -> str:
+    for unit in ("B", "KiB", "MiB", "GiB"):
+        if n < 1024 or unit == "GiB":
+            return f"{n:.1f}{unit}" if unit != "B" else f"{int(n)}B"
+        n /= 1024
+    return f"{n:.1f}GiB"
+
+
+def tenant_rows(snapshot: dict) -> list[dict]:
+    """Pull ``{tenant, ops, bytes, errors, degraded, p50_s, p99_s}`` rows
+    out of a registry snapshot's ``tenant.*`` series."""
+    tenants = sorted({k.split(".")[1] for k in snapshot
+                      if k.startswith("tenant.") and k.count(".") >= 2})
+    rows = []
+    for t in tenants:
+        pfx = f"tenant.{t}."
+        ops = snapshot.get(pfx + "ops", 0)
+        if not ops:
+            continue                    # registered but idle: keep the pane quiet
+        rows.append({
+            "tenant": t,
+            "ops": ops,
+            "bytes": snapshot.get(pfx + "bytes", 0),
+            "errors": snapshot.get(pfx + "errors", 0),
+            "degraded": snapshot.get(pfx + "degraded_reads", 0),
+            "p50_s": snapshot.get(pfx + "offload_latency_seconds.p50", 0.0),
+            "p99_s": snapshot.get(pfx + "offload_latency_seconds.p99", 0.0),
+        })
+    return rows
+
+
+def render(*, monitor: ArrayHealthMonitor | None = None,
+           engine: AlertEngine | None = None,
+           log=None, snapshot: dict | None = None, events_tail: int = 8,
+           width: int = 78) -> str:
+    """One dashboard frame as a string (no terminal control codes)."""
+    snap = snapshot if snapshot is not None else registry().snapshot()
+    log = log if log is not None else event_log()
+    bar = "=" * width
+    thin = "-" * width
+    lines = [bar,
+             f"zcsd-top  {time.strftime('%H:%M:%S')}   "
+             f"events={len(log)} (dropped={log.dropped})",
+             bar]
+
+    lines.append("POOL HEALTH")
+    if monitor is not None:
+        lines.append(f"  {'member':<18}{'status':<10}{'zones':>6}"
+                     f"{'off/ro':>8}{'errs':>6}{'outliers':>9}"
+                     f"{'read p99':>10}")
+        for smart in monitor.smart_logs():
+            glyph = _STATUS_GLYPH.get(smart["status"], "?")
+            lines.append(
+                f"  {smart['device']:<18}"
+                f"{glyph + ' ' + smart['status']:<10}"
+                f"{smart['zones']:>6}"
+                f"{str(smart['zones_offline']) + '/' + str(smart['zones_read_only']):>8}"
+                f"{smart['media_errors']:>6}"
+                f"{smart['latency_outliers']:>9}"
+                f"{smart['read_p99_s'] * 1e6:>9.0f}u")
+    else:
+        lines.append("  (no array monitor attached)")
+    lines.append(thin)
+
+    lines.append("TENANTS")
+    rows = tenant_rows(snap)
+    if rows:
+        lines.append(f"  {'tenant':<12}{'ops':>8}{'bytes':>10}{'errs':>6}"
+                     f"{'degraded':>9}{'p50':>10}{'p99':>10}")
+        for r in rows:
+            lines.append(
+                f"  {r['tenant']:<12}{r['ops']:>8}"
+                f"{_fmt_bytes(r['bytes']):>10}{r['errors']:>6}"
+                f"{r['degraded']:>9}"
+                f"{r['p50_s'] * 1e3:>8.2f}ms"
+                f"{r['p99_s'] * 1e3:>8.2f}ms")
+    else:
+        lines.append("  (no tenant traffic yet)")
+    lines.append(thin)
+
+    lines.append("ALERTS")
+    active = {r: keys for r, keys in (engine.active() if engine else {}).items()
+              if keys}
+    if active:
+        for rule, keys in sorted(active.items()):
+            for key in sorted(keys):
+                lines.append(f"  FIRING  {rule:<18} {key}")
+    else:
+        lines.append("  (none firing)")
+    if engine is not None and engine.fired:
+        last = engine.fired[-1]
+        lines.append(f"  last: [{last.severity.name}] {last.message[:width - 10]}")
+    lines.append(thin)
+
+    lines.append(f"EVENTS (last {events_tail})")
+    tail = log.tail(events_tail)
+    if tail:
+        for e in tail:
+            lines.append(f"  {e.seq:>5} [{e.severity.name:<8}] "
+                         f"{e.name:<22} {e.message[:width - 42]}")
+    else:
+        lines.append("  (event log empty)")
+    lines.append(bar)
+    return "\n".join(lines)
+
+
+# ----------------------------------------------------------- demo workload
+def _demo(stop: threading.Event):
+    """Two tenants hammering a raid1 pair; one member zone dies mid-run.
+    Returns (monitor, engine, thread)."""
+    from repro.array import OffloadScheduler, StripedZoneArray
+    from repro.core import filter_count
+    from repro.zns import ZonedDevice
+
+    data_bytes = 2 * 1024 * 1024
+    rng = np.random.default_rng(0)
+    data = rng.integers(0, 2**31 - 1, data_bytes // 4, dtype=np.int32)
+    devices = [ZonedDevice(num_zones=4, zone_bytes=data_bytes,
+                           block_bytes=4096, read_us_per_block=1.0)
+               for _ in range(2)]
+    array = StripedZoneArray(devices, stripe_blocks=64, redundancy="raid1")
+    array.zone_append(0, data)
+    program = filter_count("int32", "gt", 2**30)
+
+    monitor = ArrayHealthMonitor(array)
+    monitor.register_on(registry())
+    engine = AlertEngine(rules=[
+        HealthPromotionRule(monitor),
+        ErrorRateRule(pattern="health.*_errors"),
+        TenantLatencySLORule(0.5),
+    ])
+
+    def loop():
+        sched = OffloadScheduler(array)
+        sched.register_tenant("alice", weight=3)
+        sched.register_tenant("bob", weight=1)
+        n = 0
+        with sched:
+            while not stop.is_set():
+                sched.nvm_cmd_bpf_run(program, 0,
+                                      tenant="alice" if n % 4 else "bob")
+                n += 1
+                if n == 12:             # fault injection partway through
+                    array.set_offline(0, device=1)
+                stop.wait(0.05)
+
+    t = threading.Thread(target=loop, name="top-demo", daemon=True)
+    t.start()
+    return monitor, engine, t
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--interval", type=float, default=1.0,
+                    help="refresh interval seconds")
+    ap.add_argument("--frames", type=int, default=0,
+                    help="stop after N frames (0 = until ctrl-C)")
+    ap.add_argument("--once", action="store_true",
+                    help="render a single frame and exit")
+    args = ap.parse_args(argv)
+    if args.once:
+        args.frames = 1
+
+    stop = threading.Event()
+    monitor, engine, worker = _demo(stop)
+    frames = 0
+    try:
+        while True:
+            time.sleep(0.0 if args.once else args.interval)
+            engine.evaluate()           # doubles as the SMART sampling tick
+            frame = render(monitor=monitor, engine=engine)
+            if not args.once:
+                sys.stdout.write("\x1b[2J\x1b[H")   # clear + home
+            print(frame, flush=True)
+            frames += 1
+            if args.frames and frames >= args.frames:
+                return 0
+    except KeyboardInterrupt:
+        return 0
+    finally:
+        stop.set()
+        worker.join(timeout=5.0)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

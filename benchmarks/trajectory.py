@@ -1,4 +1,4 @@
-"""Append-only benchmark trajectories.
+"""Append-only benchmark trajectories + the latest-vs-best report.
 
 ``run.py --json`` used to overwrite each ``BENCH_*.json`` with the latest
 run, so the perf history across PRs lived only in git archaeology. Each
@@ -9,19 +9,29 @@ file is now a trajectory document::
 Every ``--json`` run APPENDS a timestamped entry; a legacy single-object
 file (the pre-trajectory format: a bare ``{"suites": ...}`` payload) is
 migrated in place on first write by becoming the trajectory's first entry
-(with ``timestamp: null`` — its run time was never recorded).
+(with ``timestamp: null`` — its run time was never recorded). Retention is
+bounded (default ``MAX_ENTRIES``, overridable per call): the oldest entries
+fall off first.
+
+Run as a script it prints the latest-vs-best report per suite row (``make
+bench-report``)::
+
+    python benchmarks/trajectory.py [BENCH_foo.json ...]
 """
 from __future__ import annotations
 
+import argparse
+import glob
 import json
 import os
+import sys
 import time
 
-__all__ = ["append_entry", "MAX_ENTRIES"]
+__all__ = ["append_entry", "report", "MAX_ENTRIES"]
 
-# bound the file size: benchmarks run per-PR, so 200 entries is years of
-# history; the oldest entries fall off first
-MAX_ENTRIES = 200
+# bound the file size: benchmarks run per-PR, so 50 entries is a year-scale
+# window of history while keeping the checked-in JSON reviewable
+MAX_ENTRIES = 50
 
 
 def _load_trajectory(path: str) -> list[dict]:
@@ -41,15 +51,88 @@ def _load_trajectory(path: str) -> list[dict]:
     return []
 
 
-def append_entry(path: str, payload: dict) -> dict:
+def append_entry(path: str, payload: dict, *,
+                 retention: int = MAX_ENTRIES) -> dict:
     """Append ``payload`` (timestamped now) to the trajectory at ``path``,
-    migrating a legacy single-object file on first write. Returns the full
-    document written."""
+    migrating a legacy single-object file on first write and keeping only
+    the newest ``retention`` entries. Returns the full document written."""
+    if retention <= 0:
+        raise ValueError("retention must be positive")
     entry = dict(payload)
     entry["timestamp"] = time.strftime("%Y-%m-%dT%H:%M:%S%z")
     trajectory = _load_trajectory(path)
     trajectory.append(entry)
-    doc = {"trajectory": trajectory[-MAX_ENTRIES:]}
+    doc = {"trajectory": trajectory[-retention:]}
     with open(path, "w") as f:
         json.dump(doc, f, indent=2, sort_keys=True)
     return doc
+
+
+# -------------------------------------------------------------- reporting
+def _entry_rows(entry: dict) -> dict[str, float]:
+    """Flatten one trajectory entry to ``{"suite/row": us_per_call}``."""
+    out: dict[str, float] = {}
+    for suite, rows in (entry.get("suites") or {}).items():
+        for r in rows:
+            us = r.get("us_per_call")
+            if isinstance(us, (int, float)):
+                out[f"{suite}/{r.get('name', '?')}"] = float(us)
+    return out
+
+
+def report(paths: list[str]) -> list[str]:
+    """Latest-vs-best lines per suite row across each file's trajectory.
+
+    'best' is the minimum us_per_call the row ever recorded; the ratio
+    column makes drift visible without diffing JSON (>=1.25x is flagged —
+    wide enough that CI-machine noise doesn't cry wolf)."""
+    lines: list[str] = []
+    for path in paths:
+        traj = _load_trajectory(path)
+        if not traj:
+            lines.append(f"== {path}: no trajectory")
+            continue
+        best: dict[str, float] = {}
+        for entry in traj:
+            for name, us in _entry_rows(entry).items():
+                if name not in best or us < best[name]:
+                    best[name] = us
+        latest = traj[-1]
+        lines.append(f"== {path} ({len(traj)} entries, latest "
+                     f"{latest.get('timestamp')})")
+        rows = _entry_rows(latest)
+        if not rows:
+            lines.append("   (latest entry has no numeric rows)")
+            continue
+        lines.append(f"   {'row':<44}{'latest_us':>12}{'best_us':>12}"
+                     f"{'vs_best':>9}")
+        for name in sorted(rows):
+            us, b = rows[name], best[name]
+            if b > 0:
+                ratio = us / b
+                flag = "  <-- drift" if ratio >= 1.25 else ""
+                ratio_s = f"{ratio:>8.2f}x"
+            else:
+                # zero-cost marker rows (pure-derived suites) have no ratio
+                ratio_s, flag = f"{'n/a':>9}", ""
+            lines.append(f"   {name:<44}{us:>12.1f}{b:>12.1f}{ratio_s}{flag}")
+    return lines
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description="print latest-vs-best per benchmark trajectory")
+    ap.add_argument("paths", nargs="*",
+                    help="trajectory files (default: ./BENCH_*.json)")
+    args = ap.parse_args(argv)
+    paths = args.paths or sorted(glob.glob("BENCH_*.json"))
+    if not paths:
+        print("no trajectory files found", file=sys.stderr)
+        return 1
+    for line in report(paths):
+        print(line)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

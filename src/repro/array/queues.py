@@ -32,8 +32,14 @@ from typing import Any, Callable, Optional, Sequence
 import numpy as np
 
 from repro.core.programs import Program
+from repro.telemetry.events import Severity as _Sev, publish as _publish_event
 from repro.telemetry.metrics import registry as _registry
 from repro.zns.ring import CompletionRing
+
+# admission waits / WRR grant latencies above this are published as events
+# (stall / starvation) on top of the always-on histograms — the operator
+# signal that one tenant's backpressure turned pathological
+STALL_EVENT_SECONDS = 0.25
 
 __all__ = [
     "QueueFullError",
@@ -117,32 +123,46 @@ class SubmissionQueue:
                timeout: Optional[float] = None) -> None:
         t0 = time.monotonic()
         deadline = None if timeout is None else t0 + timeout
-        with self._cond:
-            if len(self._q) >= self.depth and not block:
-                self.rejected += 1
-                raise QueueFullError(
-                    f"SQ '{self.tenant}' full (depth={self.depth})")
-            while len(self._q) >= self.depth:
-                # honour the TOTAL deadline across wakeups (a woken submitter
-                # may lose its slot to a rival and have to wait again)
-                remaining = None if deadline is None \
-                    else deadline - time.monotonic()
-                if (remaining is not None and remaining <= 0) or \
-                        not self._cond.wait(timeout=remaining):
+        try:
+            with self._cond:
+                if len(self._q) >= self.depth and not block:
                     self.rejected += 1
                     raise QueueFullError(
-                        f"SQ '{self.tenant}' full after {timeout}s (depth="
-                        f"{self.depth})")
-            now = time.monotonic()
-            cmd.submitted_at = now
-            self._q.append(cmd)
-            self.submitted += 1
+                        f"SQ '{self.tenant}' full (depth={self.depth})")
+                while len(self._q) >= self.depth:
+                    # honour the TOTAL deadline across wakeups (a woken
+                    # submitter may lose its slot to a rival and wait again)
+                    remaining = None if deadline is None \
+                        else deadline - time.monotonic()
+                    if (remaining is not None and remaining <= 0) or \
+                            not self._cond.wait(timeout=remaining):
+                        self.rejected += 1
+                        raise QueueFullError(
+                            f"SQ '{self.tenant}' full after {timeout}s "
+                            f"(depth={self.depth})")
+                now = time.monotonic()
+                cmd.submitted_at = now
+                self._q.append(cmd)
+                self.submitted += 1
+        except QueueFullError as e:
+            # outside the condition lock: event subscribers may themselves
+            # touch the queues
+            _publish_event(
+                "sq.reject", severity=_Sev.WARNING, message=str(e),
+                tenant=self.tenant, depth=self.depth)
+            raise
         # admission wait = backpressure the submitter ate before its slot
         # opened (zero on the uncontended path); tenant names are a bounded
         # set, so per-tenant series live on the global registry
+        wait = now - t0
         _registry().histogram(
-            f"tenant.{self.tenant}.sq_admission_wait_seconds").observe(
-                now - t0)
+            f"tenant.{self.tenant}.sq_admission_wait_seconds").observe(wait)
+        if wait > STALL_EVENT_SECONDS:
+            _publish_event(
+                "sq.stall", severity=_Sev.WARNING,
+                message=f"SQ '{self.tenant}' admission stalled "
+                        f"{wait * 1e3:.0f}ms (depth={self.depth})",
+                tenant=self.tenant, wait_s=wait, depth=self.depth)
 
     def pop(self) -> Optional[OffloadCommand]:
         with self._cond:
@@ -212,30 +232,45 @@ class WeightedRoundRobinArbiter:
     def next_command(self) -> Optional[tuple[OffloadCommand, QueuePair]]:
         """Pop the next command per WRR policy, or None if every SQ is empty."""
         with self._lock:
-            if not self._pairs:
-                return None
-            n = len(self._pairs)
-            # at most two passes: one with current credits, one after refresh
-            for _ in range(2):
-                scanned = 0
-                while scanned < n:
-                    i = self._pos
-                    pair, credit = self._pairs[i], self._credits[i]
-                    if credit > 0:
-                        cmd = pair.sq.pop()
-                        if cmd is not None:
-                            self._credits[i] -= 1
-                            if self._credits[i] == 0:
-                                self._pos = (i + 1) % n
-                            # WRR grant latency: how long the command sat in
-                            # its SQ before arbitration granted it a slot
-                            _registry().histogram(
-                                f"tenant.{pair.tenant}.wrr_grant_seconds"
-                            ).observe(time.monotonic() - cmd.submitted_at)
-                            return cmd, pair
-                    # empty queue forfeits its credit for this round
-                    self._credits[i] = 0
-                    self._pos = (i + 1) % n
-                    scanned += 1
-                self._refresh()
+            granted = self._next_locked()
+        if granted is None:
             return None
+        cmd, pair = granted
+        # WRR grant latency: how long the command sat in its SQ before
+        # arbitration granted it a slot; pathological residency (a starved
+        # low-weight tenant behind heavy rivals) also surfaces as an event.
+        # Metrics + events run outside the arbiter lock.
+        wait = time.monotonic() - cmd.submitted_at
+        _registry().histogram(
+            f"tenant.{pair.tenant}.wrr_grant_seconds").observe(wait)
+        if wait > STALL_EVENT_SECONDS:
+            _publish_event(
+                "wrr.starvation", severity=_Sev.WARNING,
+                message=f"tenant '{pair.tenant}' command waited "
+                        f"{wait * 1e3:.0f}ms for a WRR grant",
+                tenant=pair.tenant, wait_s=wait)
+        return cmd, pair
+
+    def _next_locked(self) -> Optional[tuple[OffloadCommand, QueuePair]]:
+        if not self._pairs:
+            return None
+        n = len(self._pairs)
+        # at most two passes: one with current credits, one after refresh
+        for _ in range(2):
+            scanned = 0
+            while scanned < n:
+                i = self._pos
+                pair, credit = self._pairs[i], self._credits[i]
+                if credit > 0:
+                    cmd = pair.sq.pop()
+                    if cmd is not None:
+                        self._credits[i] -= 1
+                        if self._credits[i] == 0:
+                            self._pos = (i + 1) % n
+                        return cmd, pair
+                # empty queue forfeits its credit for this round
+                self._credits[i] = 0
+                self._pos = (i + 1) % n
+                scanned += 1
+            self._refresh()
+        return None

@@ -52,6 +52,7 @@ from typing import Callable, Optional, Sequence
 import numpy as np
 
 from repro.telemetry import trace as _trace
+from repro.telemetry.events import Severity as _Sev, publish as _publish_event
 from repro.telemetry.metrics import MetricsRegistry, registry as _registry
 from repro.zns.device import (
     OutOfBoundsError,
@@ -455,6 +456,10 @@ class StripedZoneArray:
         self.metrics = MetricsRegistry("array")
         self._c_degraded_reads = self.metrics.counter("degraded_reads")
         self._c_gather_bytes = self.metrics.counter("gather_bytes_copied")
+        # zones that already announced degraded serving in the event log —
+        # the first degraded read per zone is the operator-visible moment,
+        # the per-read volume lives in the degraded_reads counter
+        self._degraded_announced: set[int] = set()
         # member transfers fan out as in-flight completion-ring descriptors
         # (repro.zns.ring): an N-member read holds N reactor slots and ZERO
         # worker threads, and CONCURRENT logical reads (different zones /
@@ -728,6 +733,14 @@ class StripedZoneArray:
                        ring=ring)
         agg.submitted_block = start
         if error is not None:
+            if member_futs:
+                # the zone was fenced above: members no longer agree on the
+                # stripe stream until reset_zone
+                _publish_event(
+                    "array.zone_fenced", severity=_Sev.ERROR,
+                    message=f"logical zone {zone_id} fenced READ_ONLY after "
+                            f"torn append: {error}",
+                    zone=zone_id, error=type(error).__name__)
             err = error
             barrier = CompletionBarrier(
                 len(member_futs), lambda _vals, _e: agg.fail(err))
@@ -904,7 +917,26 @@ class StripedZoneArray:
         # pool (detected by thread — the pump never memcpys)
         for ji, job in submitted:
             job.attach(self, out, barrier, ji)
+        if n_degraded:
+            self.note_degraded_serving(zone_id)
         return agg
+
+    def note_degraded_serving(self, zone_id: int) -> None:
+        """Publish the once-per-zone (until reset) operator event the first
+        time a logical zone serves reads via reconstruction/redirect —
+        per-read volume lives in the ``degraded_reads`` counter. Every read
+        planner (the direct submit path and the offload scheduler's chunk
+        planner) calls this outside the array lock; the lock is re-taken
+        only for the announced-set check."""
+        with self._lock:
+            if zone_id in self._degraded_announced:
+                return
+            self._degraded_announced.add(zone_id)
+        _publish_event(
+            "array.degraded_read", severity=_Sev.WARNING,
+            message=f"logical zone {zone_id} now serving degraded reads "
+                    f"({self.redundancy})",
+            zone=zone_id, redundancy=self.redundancy)
 
     def read_blocks_view(self, zone_id: int, block_off: int, nblocks: int) -> np.ndarray:
         """Minimal-copy read for the ``ZonedDevice`` view contract: a striped
@@ -1022,6 +1054,7 @@ class StripedZoneArray:
                 dev.reset_zone(zone_id)
             self._wp[zone_id] = 0
             self._fenced.discard(zone_id)
+            self._degraded_announced.discard(zone_id)
             self._pacc_lost.discard(zone_id)
             if zone_id in self._pacc:
                 self._pacc[zone_id][:] = 0
@@ -1034,6 +1067,12 @@ class StripedZoneArray:
             targets = self.devices if device is None else [self.devices[device]]
             for dev in targets:
                 dev.set_offline(zone_id)
+        members = list(range(self.n_devices)) if device is None else [device]
+        _publish_event(
+            "array.member_offline", severity=_Sev.ERROR,
+            message=f"zone {zone_id} killed on member(s) {members} "
+                    f"({self.redundancy})",
+            zone=zone_id, members=members, redundancy=self.redundancy)
 
     # --------------------------------------------------------------- misc
     def flush(self) -> None:

@@ -1,6 +1,6 @@
-"""Unified observability for the emulator: span tracing + metrics.
+"""Unified observability for the emulator: tracing, metrics, health, alerts.
 
-Two halves, one import point:
+Producer side (PR 6), one import point:
 
   * :mod:`repro.telemetry.trace` — lock-light span recorder on wall AND
     reactor virtual time, exportable as Chrome ``trace_event`` JSON
@@ -10,8 +10,26 @@ Two halves, one import point:
     snapshot/delta semantics. The global :func:`metrics.registry` aggregates
     process-wide components (reactor, gather pool, tenant queues, compile
     caches); per-instance components expose ``obj.metrics``.
+
+Consumer side (PR 7):
+
+  * :mod:`repro.telemetry.events` — bounded structured event log every
+    layer publishes discrete happenings into (zone transitions, member
+    death, SQ stalls, ring drops, ticket failures); global
+    :func:`events.event_log`, JSONL export, subscription hook.
+  * :mod:`repro.telemetry.health` — SMART-style per-device health: error
+    counters, EWMA latency-outlier detection, composite
+    HEALTHY/SUSPECT/DEGRADED/OFFLINE status, ``smart_log()`` dicts.
+  * :mod:`repro.telemetry.alerts` — rule engine over metric snapshots and
+    event patterns (per-tenant p99 SLO, error rates, health promotions);
+    firing alerts are events and invoke registered callbacks.
 """
-from . import metrics, trace
+from . import alerts, events, health, metrics, trace
+from .alerts import (Alert, AlertEngine, AlertRule, ErrorRateRule,
+                     EventPatternRule, HealthPromotionRule,
+                     TenantLatencySLORule)
+from .events import Event, EventLog, Severity, event_log, publish
+from .health import ArrayHealthMonitor, DeviceHealthMonitor, HealthStatus
 from .metrics import (Counter, Gauge, Histogram, MetricsRegistry, StatsView,
                       registry)
 from .trace import span, instant, event_complete, tracing, set_enabled
@@ -19,6 +37,9 @@ from .trace import span, instant, event_complete, tracing, set_enabled
 __all__ = [
     "metrics",
     "trace",
+    "events",
+    "health",
+    "alerts",
     "Counter",
     "Gauge",
     "Histogram",
@@ -30,4 +51,19 @@ __all__ = [
     "event_complete",
     "tracing",
     "set_enabled",
+    "Event",
+    "EventLog",
+    "Severity",
+    "event_log",
+    "publish",
+    "HealthStatus",
+    "DeviceHealthMonitor",
+    "ArrayHealthMonitor",
+    "Alert",
+    "AlertEngine",
+    "AlertRule",
+    "TenantLatencySLORule",
+    "ErrorRateRule",
+    "HealthPromotionRule",
+    "EventPatternRule",
 ]

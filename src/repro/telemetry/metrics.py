@@ -197,16 +197,21 @@ class Histogram:
             count, total = self._count, self._sum
             mn = self._min if self._count else 0.0
             mx = self._max if self._count else 0.0
-        return {
+        out = {
             "count": count,
             "sum": total,
             "mean": total / count if count else 0.0,
             "min": mn,
             "max": mx,
-            "p50": self.percentile(50),
-            "p95": self.percentile(95),
-            "p99": self.percentile(99),
         }
+        if count:
+            # no quantile keys for an empty histogram: a fabricated p99 of
+            # 0.0 reads as "perfect latency" to SLO rules and dashboards,
+            # the opposite of "no data" — absent keys make idle series
+            # unambiguous (and keep idle tenants from ever paging)
+            out.update(p50=self.percentile(50), p95=self.percentile(95),
+                       p99=self.percentile(99))
+        return out
 
     def __repr__(self) -> str:
         return f"Histogram({self.name} n={self._count} mean={self.mean:.3g})"

@@ -108,6 +108,15 @@ class _Ring:
         h = self.head
         if h >= RING_CAPACITY and self.buf[h % RING_CAPACITY] is not None:
             self.dropped += 1
+            if self.dropped == 1:
+                # cold path, once per ring lifetime: tell the event log the
+                # exported trace will be incomplete for this thread. Imported
+                # lazily — the hot append path must stay import-free.
+                from .events import Severity, publish
+                publish("trace.ring_drop", severity=Severity.WARNING,
+                        message=f"trace ring for thread {self.tname!r} "
+                                f"wrapped (capacity {RING_CAPACITY})",
+                        thread=self.tname, capacity=RING_CAPACITY)
         self.buf[h % RING_CAPACITY] = ev
         self.head = h + 1
 

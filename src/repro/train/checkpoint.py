@@ -50,6 +50,7 @@ import numpy as np
 
 from repro.array import OffloadScheduler, StripedZoneArray
 from repro.telemetry import trace as _trace
+from repro.telemetry.events import Severity as _Sev, publish as _publish_event
 from repro.telemetry.metrics import MetricsRegistry, StatsView
 from repro.zns import CompletionBarrier, IoFuture, ZonedDevice, ZoneState
 
@@ -307,7 +308,8 @@ class ZonedCheckpointStore:
         # on the shared monotonic clock, so checkpoint saves line up against
         # device/offload tracks in the exported trace
         ticket_fut.add_done_callback(
-            lambda _f: self._observe_ticket("save", t0, step=step, leaves=n))
+            lambda f: self._observe_ticket("save", t0, f, step=step,
+                                           leaves=n))
         entries: list[Optional[dict]] = [None] * n
         save_zones: list[int] = []   # uncommitted-zone guard, released at settle
 
@@ -376,7 +378,8 @@ class ZonedCheckpointStore:
                 on_payload(i, e, None)
         return CheckpointTicket(ticket_fut)
 
-    def _observe_ticket(self, op: str, t0: float, **tags) -> None:
+    def _observe_ticket(self, op: str, t0: float,
+                        fut: Optional[IoFuture] = None, **tags) -> None:
         """Record one async ticket's barrier lifetime (submission entry to
         last completion retired) — runs on whichever thread settles the
         final transfer, so it must stay allocation-light."""
@@ -385,6 +388,14 @@ class ZonedCheckpointStore:
         if _trace.enabled():
             _trace.event_complete(f"ckpt.{op}", t0, dt, track="checkpoint",
                                   **tags)
+        if fut is not None and fut.error is not None:
+            # failed tickets surface in the operator event stream too, not
+            # only to the caller holding the ticket
+            _publish_event(
+                "ckpt.ticket_failed", severity=_Sev.ERROR,
+                message=f"checkpoint {op} ticket failed after {dt:.3f}s: "
+                        f"{fut.error}",
+                op=op, error=type(fut.error).__name__, **tags)
 
     def _release_pins(self, zones: list[int]) -> None:
         with self._mlock:
@@ -638,8 +649,9 @@ class ZonedCheckpointStore:
             except BaseException as err:
                 barrier.settle(i, err)   # settle the leaf; ticket fails loudly
         ticket_fut.add_done_callback(
-            lambda _f: self._observe_ticket(
-                "restore", t0, step=manifest["step"], leaves=len(entries)))
+            lambda f: self._observe_ticket(
+                "restore", t0, f, step=manifest["step"],
+                leaves=len(entries)))
         ticket = CheckpointTicket(ticket_fut, finalize)
         # abandoned ticket (e.g. result() timed out and the caller moved on):
         # the pins must not outlive it, or gc could never reclaim the zones

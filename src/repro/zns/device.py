@@ -36,6 +36,7 @@ from typing import Optional
 import numpy as np
 
 from repro.telemetry import trace as _trace
+from repro.telemetry.events import Severity as _Sev, publish as _publish_event
 from repro.telemetry.metrics import MetricsRegistry, StatsView
 from repro.zns.ring import CompletionRing, IoFuture, IoReactor
 
@@ -211,6 +212,15 @@ class ZonedDevice:
         self._c_zone_finishes = self.metrics.counter("zone_finishes")
         self._c_bytes_copied = self.metrics.counter("bytes_copied")
         self._c_bytes_viewed = self.metrics.counter("bytes_viewed")
+        # SMART-style error/transition counters: protocol+media errors per
+        # direction and host-visible zone degradations — the raw attributes
+        # DeviceHealthMonitor reads to compute the composite status.
+        self._c_read_errors = self.metrics.counter("read_errors")
+        self._c_append_errors = self.metrics.counter("append_errors")
+        self._c_zone_ro_transitions = self.metrics.counter(
+            "zone_readonly_transitions")
+        self._c_zone_off_transitions = self.metrics.counter(
+            "zone_offline_transitions")
         self.stats = StatsView({
             "blocks_read": self._c_blocks_read,
             "blocks_appended": self._c_blocks_appended,
@@ -218,6 +228,8 @@ class ZonedDevice:
             "zone_finishes": self._c_zone_finishes,
             "bytes_copied": self._c_bytes_copied,
             "bytes_viewed": self._c_bytes_viewed,
+            "read_errors": self._c_read_errors,
+            "append_errors": self._c_append_errors,
         })
         # Service/queue-wait distributions for emulated (timed) transfers
         # only — the zero-service fast path stays metric-free.
@@ -250,11 +262,14 @@ class ZonedDevice:
             z = self.zone(zone_id)
             if z.state == ZoneState.EMPTY:
                 if self.max_open_zones and len(self.open_zones()) >= self.max_open_zones:
+                    self._c_append_errors.inc()
                     raise ZoneStateError("max open zones exceeded")
                 z.state = ZoneState.OPEN
             if not z.is_writable:
+                self._c_append_errors.inc()
                 raise ZoneStateError(f"zone {zone_id} not writable (state={z.state})")
             if nblocks > z.remaining_blocks:
+                self._c_append_errors.inc()
                 raise ZoneFullError(
                     f"append of {nblocks} blocks exceeds zone {zone_id} "
                     f"remaining {z.remaining_blocks}"
@@ -375,8 +390,10 @@ class ZonedDevice:
         with self._lock:
             z = self.zone(zone_id)
             if z.state == ZoneState.OFFLINE:
+                self._c_read_errors.inc()
                 raise ZoneStateError(f"zone {zone_id} is offline")
             if block_off < 0 or nblocks < 0 or block_off + nblocks > z.write_pointer:
+                self._c_read_errors.inc()
                 raise OutOfBoundsError(
                     f"read [{block_off},{block_off + nblocks}) beyond write pointer "
                     f"{z.write_pointer} of zone {zone_id}"
@@ -485,7 +502,18 @@ class ZonedDevice:
 
     def set_read_only(self, zone_id: int) -> None:
         with self._lock:
-            self.zone(zone_id).state = ZoneState.READ_ONLY
+            z = self.zone(zone_id)
+            changed = z.state is not ZoneState.READ_ONLY
+            z.state = ZoneState.READ_ONLY
+            if changed:
+                self._c_zone_ro_transitions.inc()
+        if changed:
+            # outside the device lock: event subscribers may re-enter the
+            # device (a dashboard polling report_zones must not deadlock)
+            _publish_event(
+                "zone.read_only", severity=_Sev.WARNING,
+                message=f"dev{self.dev_ordinal} zone {zone_id} -> READ_ONLY",
+                device=f"dev{self.dev_ordinal}", zone=zone_id)
 
     def reset_zone(self, zone_id: int) -> None:
         """ZNS 'Zone Management Send / Reset': host-managed GC.
@@ -505,7 +533,16 @@ class ZonedDevice:
     def set_offline(self, zone_id: int) -> None:
         """Fault injection: mark a zone dead (used by fault-tolerance tests)."""
         with self._lock:
-            self.zone(zone_id).state = ZoneState.OFFLINE
+            z = self.zone(zone_id)
+            changed = z.state is not ZoneState.OFFLINE
+            z.state = ZoneState.OFFLINE
+            if changed:
+                self._c_zone_off_transitions.inc()
+        if changed:
+            _publish_event(
+                "zone.offline", severity=_Sev.ERROR,
+                message=f"dev{self.dev_ordinal} zone {zone_id} -> OFFLINE",
+                device=f"dev{self.dev_ordinal}", zone=zone_id)
 
     # ------------------------------------------------------------------ misc
     def flush(self) -> None:

@@ -39,6 +39,7 @@ from collections import deque
 from typing import Callable, Optional
 
 from repro.telemetry import metrics as _metrics
+from repro.telemetry.events import Severity as _Sev, publish as _publish_event
 
 __all__ = ["IoFuture", "IoReactor", "CompletionRing", "CompletionBarrier",
            "in_reactor_thread"]
@@ -234,11 +235,22 @@ class CompletionRing:
 
     def push(self, entry) -> None:
         with self._cond:
+            first_drop = False
             if len(self._q) == self.depth:
+                if self.dropped == 0:
+                    first_drop = True
                 self.dropped += 1          # ring overwrite of the oldest CQE
             self._q.append(entry)
             self.retired += 1
             self._cond.notify_all()
+        if first_drop:
+            # one event per ring lifetime, outside the lock (push may run on
+            # the reactor thread); ``dropped`` counts the rest
+            _publish_event(
+                "ring.cq_drop", severity=_Sev.WARNING,
+                message=f"completion ring depth={self.depth} overwrote its "
+                        "oldest entry (host not keeping up)",
+                depth=self.depth)
 
     def pop(self, *, timeout: Optional[float] = None):
         with self._cond:

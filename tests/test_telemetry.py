@@ -106,9 +106,23 @@ class TestHistogram:
 
     def test_empty(self):
         h = Histogram("lat")
+        assert h.percentile(99) == 0.0      # explicit query stays defined
         snap = h.snapshot()
         assert snap["count"] == 0
-        assert snap["p99"] == 0.0
+        # no fabricated quantiles: an idle series must read as "no data",
+        # not as p99=0.0 "perfect latency" (which would satisfy any SLO)
+        assert not any(k.startswith("p") for k in snap)
+        h.observe(1.0)
+        snap = h.snapshot()
+        assert snap["count"] == 1 and "p99" in snap
+
+    def test_registry_snapshot_omits_empty_histogram_quantiles(self):
+        reg = MetricsRegistry("t")
+        reg.histogram("idle")
+        reg.histogram("busy").observe(0.5)
+        snap = reg.snapshot()
+        assert "idle.count" in snap and "idle.p99" not in snap
+        assert snap["busy.p99"] > 0.0
 
     def test_default_buckets_cover_emulated_io(self):
         b = default_latency_buckets()
