@@ -19,7 +19,7 @@ test-all:
 	python -m pytest -x -q
 
 smoke:
-	python benchmarks/run.py --only filter,array,hotpath,async,degraded,health --json
+	python benchmarks/run.py --only filter,array,hotpath,async,degraded,health,rebuild --json
 
 # hot-path regression tripwire: the CI-size suites must fit the wall-clock
 # budget (measured ~10s on 2 cores incl. compiles; ~9x headroom so only a
@@ -34,9 +34,12 @@ smoke:
 # cost under 3% of the single-device offload row. The health suite asserts
 # the injected-fault pipeline end to end (SMART counters -> SUSPECT event
 # -> DEGRADED alert + callback -> per-tenant degraded-read accounting) and
-# the event-log publish cost under 3% of the single-device read row.
+# the event-log publish cost under 3% of the single-device read row. The
+# rebuild suite asserts unattended recovery (member death -> alert-path
+# spare promotion -> online rebuild concurrent with bit-identical offloads
+# -> writable zones -> clean scrub) and the xor double-fault containment.
 bench-smoke:
-	python benchmarks/run.py --only filter,array,async,degraded,profile,health --budget 120
+	python benchmarks/run.py --only filter,array,async,degraded,profile,health,rebuild --budget 120
 
 # tiny traced offload, then validate the exported Chrome trace-event JSON
 # (Perfetto-loadable): the end-to-end check that virtual device tracks and

@@ -1,0 +1,279 @@
+"""Self-healing array: unattended recovery end to end, loud in CI.
+
+The self-healing loop is only trustworthy if a member death recovers with
+NOBODY at the keyboard. This benchmark injects one and asserts the whole
+chain (every stage a hard tripwire, same posture as ``bench_health``):
+
+  * **alert-path promotion** — killing a raid1 member fires the
+    :class:`HealthPromotionRule` through the :class:`AlertEngine`; the
+    :class:`ArrayManager`'s callback pops a hot spare and starts the
+    rebuild with no manual call;
+  * **online rebuild** — the copy runs on the metered ``"rebuild"`` tenant
+    (WRR-arbitrated against live traffic; the spare is paced with an
+    emulated per-block append latency so the overlap is guaranteed, not
+    lucky) while offloads keep streaming — every offload issued DURING the
+    rebuild must return the healthy answer bit-identically, and the
+    offload p99 under concurrent rebuild must stay within a bounded factor
+    of the healthy baseline;
+  * **full recovery** — after the rebuild: every zone writable again
+    (post-rebuild appends succeed), reads bit-identical, a full scrub
+    reports zero mismatches, and the rebuild tenant's SQ accounting shows
+    the copy traffic actually rode the arbiter;
+  * **scrub interference** — a scrub pass racing the offload stream stays
+    on the ``"scrub"`` tenant and leaves the offload p99 bounded;
+  * **xor double-fault** — a survivor dies mid-rebuild: the affected zone
+    goes OFFLINE with a clean refusal (never half-rebuilt garbage), the
+    other zones complete, and the whole episode terminates in bounded
+    wall time — no hangs, no corruption.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.array import ArrayManager, OffloadScheduler, StripedZoneArray
+from repro.core import filter_count
+from repro.telemetry import (
+    AlertEngine,
+    ArrayHealthMonitor,
+    HealthPromotionRule,
+    event_log,
+)
+from repro.zns import ZNSError, ZonedDevice
+
+RAND_MAX = 2**31 - 1
+BLOCK = 4096
+# generous CI bound: a WRR slice behind a paced rebuild batch, not a hang
+MAX_P99_FACTOR = 50.0
+MAX_P99_FLOOR_S = 0.25
+DOUBLE_FAULT_BUDGET_S = 30.0
+
+
+def _mk_dev(num_zones: int, zone_bytes: int, **kw) -> ZonedDevice:
+    return ZonedDevice(num_zones=num_zones, zone_bytes=zone_bytes,
+                       block_bytes=BLOCK, **kw)
+
+
+def run_recovery(*, data_mib: int = 8, runs: int = 3,
+                 read_us_per_block: float = 0.5,
+                 spare_append_us_per_block: float = 40.0) -> dict:
+    """Kill a raid1 member mid-stream; assert unattended recovery."""
+    zone_bytes = data_mib * 1024 * 1024 // 2
+    zone_blocks = zone_bytes // BLOCK
+    rng = np.random.default_rng(0)
+    program = filter_count("int32", "gt", RAND_MAX // 2)
+
+    devices = [_mk_dev(3, zone_bytes, read_us_per_block=read_us_per_block)
+               for _ in range(2)]
+    array = StripedZoneArray(devices, stripe_blocks=64, redundancy="raid1")
+    fills, expected = [], []
+    for z in range(3):
+        fill = zone_blocks // 2 + 64 * z        # distinct, half-ish fills
+        data = rng.integers(0, RAND_MAX, fill * BLOCK // 4, dtype=np.int32)
+        array.zone_append(z, data)
+        fills.append(fill)
+        expected.append(int((data > RAND_MAX // 2).sum()))
+    baseline = [array.read_zone(z).copy() for z in range(3)]
+
+    log = event_log()
+    seq0 = log.last_seq()
+    monitor = ArrayHealthMonitor(array)
+    engine = AlertEngine(rules=[HealthPromotionRule(monitor)])
+
+    t_start = time.perf_counter()
+    with OffloadScheduler(array) as sched:
+        sched.register_tenant("alice")
+        # the spare is paced: ~zone_blocks/2 * 25us per zone of copy, so
+        # the offload loop below is guaranteed to overlap the rebuild
+        spare = _mk_dev(3, zone_bytes,
+                        append_us_per_block=spare_append_us_per_block)
+        mgr = ArrayManager(array, scheduler=sched, spares=[spare],
+                           monitor=monitor, rows_per_io=4)
+        unsub = mgr.attach(engine)
+
+        # -------- healthy baseline
+        monitor.sample()
+        healthy_s = []
+        for _ in range(runs):
+            for z in range(3):
+                t0 = time.perf_counter()
+                sched.nvm_cmd_bpf_run(program, z, tenant="alice")
+                healthy_s.append(time.perf_counter() - t0)
+                assert int(sched.nvm_cmd_bpf_result()) == expected[z]
+        assert engine.evaluate() == [], "healthy array fired an alert"
+
+        # -------- fault: the member dies; NOBODY calls promote_spare
+        for z in range(3):
+            array.set_offline(z, device=1)
+        fired = engine.evaluate()
+        assert any(a.rule == "member_degraded" for a in fired), fired
+        assert log.snapshot(name="spare.promoted", since_seq=seq0), \
+            "alert did not auto-promote the spare"
+
+        # -------- offloads DURING the rebuild: bit-identical, bounded p99
+        during_s, during_n = [], 0
+        deadline = time.monotonic() + 60.0
+        while mgr.rebuild_active() and time.monotonic() < deadline:
+            z = during_n % 3
+            t0 = time.perf_counter()
+            sched.nvm_cmd_bpf_run(program, z, tenant="alice")
+            during_s.append(time.perf_counter() - t0)
+            assert int(sched.nvm_cmd_bpf_result()) == expected[z], \
+                "offload during rebuild differs from healthy answer"
+            during_n += 1
+        assert during_n >= 1, "rebuild finished before any offload ran " \
+                              "(pacing broken — overlap not exercised)"
+        assert mgr.wait(timeout=60.0), "rebuild did not finish"
+        st = mgr.status()[1]
+        assert st["state"] == "complete", st
+        recovery_s = time.perf_counter() - t_start
+
+        # -------- full recovery: writable, bit-identical, scrub-clean
+        for z in range(3):
+            assert array.zone(z).is_writable, f"zone {z} not writable"
+            assert np.array_equal(array.read_zone(z), baseline[z]), \
+                f"zone {z} not bit-identical after rebuild"
+            array.zone_append(z, np.zeros(BLOCK, np.uint8))
+        scrub = mgr.scrub()
+        assert scrub["mismatches"] == 0, scrub
+        ts = sched.tenant_stats()
+        assert ts["rebuild"]["ops"] > 0 and ts["rebuild"]["bytes"] > 0, \
+            "rebuild traffic was not metered on the rebuild tenant"
+
+        # -------- scrub-vs-offload interference on the WRR arbiter
+        with_scrub_s = []
+        for _ in range(runs):
+            res = mgr.scrub()        # rides the "scrub" tenant's SQ
+            for z in range(3):
+                t0 = time.perf_counter()
+                sched.nvm_cmd_bpf_run(program, z, tenant="alice")
+                with_scrub_s.append(time.perf_counter() - t0)
+                assert int(sched.nvm_cmd_bpf_result()) == expected[z]
+        assert res["mismatches"] == 0
+        assert sched.tenant_stats()["scrub"]["ops"] > 0, \
+            "scrub traffic was not metered on the scrub tenant"
+        unsub()
+        alice = sched.tenant_stats()["alice"]
+
+    healthy_p99 = float(np.percentile(healthy_s, 99))
+    during_p99 = float(np.percentile(during_s, 99))
+    scrub_p99 = float(np.percentile(with_scrub_s, 99))
+    bound = max(MAX_P99_FACTOR * healthy_p99, MAX_P99_FLOOR_S)
+    assert during_p99 <= bound, (
+        f"offload p99 under rebuild {during_p99 * 1e3:.1f}ms exceeds "
+        f"{MAX_P99_FACTOR:g}x healthy baseline {healthy_p99 * 1e3:.1f}ms")
+    assert scrub_p99 <= bound, (
+        f"offload p99 under scrub {scrub_p99 * 1e3:.1f}ms exceeds "
+        f"{MAX_P99_FACTOR:g}x healthy baseline {healthy_p99 * 1e3:.1f}ms")
+    return {
+        "recovery_seconds": recovery_s,
+        "healthy_p99_s": healthy_p99,
+        "during_p99_s": during_p99,
+        "scrub_p99_s": scrub_p99,
+        "offloads_during_rebuild": during_n,
+        "zones_done": st["zones_done"],
+        "rows_verified": scrub["rows_verified"],
+        "rebuild_ops": ts["rebuild"]["ops"],
+        "rebuild_mib": ts["rebuild"]["bytes"] / 2**20,
+        "alice_ops": alice["ops"],
+    }
+
+
+def run_double_fault(*, data_mib: int = 8,
+                     spare_append_us_per_block: float = 25.0) -> dict:
+    """xor survivor dies mid-rebuild: OFFLINE zone, zero corruption,
+    bounded wall time."""
+    # 3 data columns, 2 zones; member zones stripe-aligned (64 blocks)
+    zone_blocks = max(64, data_mib * 1024 * 1024 // 6 // BLOCK // 64 * 64)
+    zone_bytes = zone_blocks * BLOCK
+    rng = np.random.default_rng(1)
+
+    devices = [_mk_dev(2, zone_bytes) for _ in range(4)]
+    array = StripedZoneArray(devices, stripe_blocks=64, redundancy="xor")
+    baseline = []
+    for z in range(2):
+        data = rng.integers(0, RAND_MAX, 3 * zone_blocks * BLOCK // 8,
+                            dtype=np.int32)     # ~half of each logical zone
+        array.zone_append(z, data)
+        baseline.append(array.read_zone(z).copy())
+
+    victim, survivor = 1, 3
+    for z in range(2):
+        array.set_offline(z, device=victim)
+    spare = _mk_dev(2, zone_bytes,
+                    append_us_per_block=spare_append_us_per_block)
+    mgr = ArrayManager(array, spares=[spare], rows_per_io=4)
+
+    tripped = []
+
+    def on_event(e):
+        # the instant zone 0 cuts over, a SECOND member dies for zone 1:
+        # the xor rebuild of zone 1 has lost its reconstruction source
+        if e.name == "array.zone_rebuilt" and not tripped:
+            tripped.append(True)
+            nxt = sorted(array.rebuilding_zones())
+            if nxt:
+                array.devices[survivor].set_offline(nxt[0])
+
+    unsub = event_log().subscribe(on_event)
+    t0 = time.perf_counter()
+    try:
+        assert mgr.promote_spare(victim, reason="bench")
+        assert mgr.wait(timeout=DOUBLE_FAULT_BUDGET_S), \
+            "double-fault rebuild hung"
+    finally:
+        unsub()
+    elapsed = time.perf_counter() - t0
+    assert elapsed < DOUBLE_FAULT_BUDGET_S
+    st = mgr.status()[victim]
+    assert tripped, "injection point never reached"
+    assert st["state"] == "degraded", st
+    assert len(st["zones_failed"]) == 1, st
+    dead = st["zones_failed"][0]
+    assert array.zone(dead).state.value == "offline"
+    try:
+        array.read_zone(dead)
+        raise AssertionError("double-faulted zone served a read")
+    except ZNSError:
+        pass                                    # clean refusal, not garbage
+    live = 1 - dead
+    assert array.zone(live).is_writable
+    assert np.array_equal(array.read_zone(live), baseline[live]), \
+        "surviving zone corrupted by the aborted rebuild"
+    return {"elapsed_seconds": elapsed, "dead_zone": dead,
+            "zones_done": st["zones_done"]}
+
+
+def main(data_mib: int = 8, runs: int = 3) -> list[str]:
+    rows = []
+    r = run_recovery(data_mib=data_mib, runs=runs)
+    rows.append(
+        f"rebuild_unattended_recovery,{r['recovery_seconds'] * 1e6:.0f},"
+        f"offloads_during_rebuild={r['offloads_during_rebuild']};"
+        f"zones_done={r['zones_done']};"
+        f"rebuild_ops={r['rebuild_ops']};"
+        f"rebuild_mib={r['rebuild_mib']:.1f};"
+        f"scrub_rows={r['rows_verified']};"
+        f"alice_ops={r['alice_ops']}"
+    )
+    rows.append(
+        f"rebuild_p99_interference,{r['during_p99_s'] * 1e6:.0f},"
+        f"healthy_p99_us={r['healthy_p99_s'] * 1e6:.0f};"
+        f"during_p99_us={r['during_p99_s'] * 1e6:.0f};"
+        f"scrub_p99_us={r['scrub_p99_s'] * 1e6:.0f};"
+        f"factor_vs_healthy="
+        f"{r['during_p99_s'] / max(r['healthy_p99_s'], 1e-9):.1f}x"
+    )
+    d = run_double_fault(data_mib=data_mib)
+    rows.append(
+        f"rebuild_xor_double_fault,{d['elapsed_seconds'] * 1e6:.0f},"
+        f"dead_zone={d['dead_zone']};zones_done={d['zones_done']};"
+        f"outcome=offline_clean"
+    )
+    return rows
+
+
+if __name__ == "__main__":
+    for row in main():
+        print(row)

@@ -5,8 +5,9 @@ Prints ``name,us_per_call,derived`` CSV lines. Scaled-down sizes by default
 ``--json`` additionally APPENDS a timestamped entry to the
 ``BENCH_hotpath.json`` trajectory (per-suite rows with parsed derived
 metrics) — plus ``BENCH_async.json`` for the async completion-ring suite,
-``BENCH_degraded.json`` for the redundancy / degraded-read suite and
-``BENCH_profile.json`` for the traced fan-out profile when they ran — so
+``BENCH_degraded.json`` for the redundancy / degraded-read suite,
+``BENCH_profile.json`` for the traced fan-out profile and
+``BENCH_rebuild.json`` for the self-healing recovery suite when they ran — so
 the perf trajectory is machine-readable across PRs (legacy single-object
 files are migrated into trajectories on first write; see
 ``benchmarks/trajectory.py``); ``--budget SECONDS`` fails the run loudly
@@ -25,6 +26,7 @@ ASYNC_JSON_PATH = "BENCH_async.json"
 DEGRADED_JSON_PATH = "BENCH_degraded.json"
 PROFILE_JSON_PATH = "BENCH_profile.json"
 HEALTH_JSON_PATH = "BENCH_health.json"
+REBUILD_JSON_PATH = "BENCH_rebuild.json"
 
 
 def _parse_derived(derived: str) -> dict:
@@ -62,7 +64,7 @@ def main() -> int:
     ap.add_argument("--only", default=None,
                     help="comma-separated subset: filter,hotpath,toolchain,"
                          "pushdown,checkpoint,paged_attn,roofline,array,"
-                         "async,degraded,profile,health")
+                         "async,degraded,profile,health,rebuild")
     ap.add_argument("--list", action="store_true",
                     help="print the available suite names and exit")
     ap.add_argument("--json", action="store_true",
@@ -74,8 +76,8 @@ def main() -> int:
     from benchmarks import (bench_array, bench_async, bench_checkpoint,
                             bench_degraded, bench_filter, bench_health,
                             bench_hotpath, bench_paged_attn, bench_profile,
-                            bench_pushdown, bench_toolchain, roofline,
-                            trajectory)
+                            bench_pushdown, bench_rebuild, bench_toolchain,
+                            roofline, trajectory)
 
     suites = {
         "filter": lambda: bench_filter.main(
@@ -92,6 +94,8 @@ def main() -> int:
             data_mib=64 if args.full else 16, runs=5 if args.full else 3),
         "health": lambda: bench_health.main(
             data_mib=8 if args.full else 4, runs=5 if args.full else 3),
+        "rebuild": lambda: bench_rebuild.main(
+            data_mib=16 if args.full else 8, runs=5 if args.full else 3),
         "toolchain": bench_toolchain.main,
         "pushdown": bench_pushdown.main,
         "checkpoint": bench_checkpoint.main,
@@ -139,7 +143,8 @@ def main() -> int:
         for suite, path in (("async", ASYNC_JSON_PATH),
                             ("degraded", DEGRADED_JSON_PATH),
                             ("profile", PROFILE_JSON_PATH),
-                            ("health", HEALTH_JSON_PATH)):
+                            ("health", HEALTH_JSON_PATH),
+                            ("rebuild", REBUILD_JSON_PATH)):
             if suite not in results:
                 continue
             trajectory.append_entry(path, {"suites": {suite: results[suite]},

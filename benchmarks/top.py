@@ -3,8 +3,10 @@
 Renders the operator's view of an emulated array the way ``iostat``/``ztop``
 would: per-member SMART health, per-tenant QoS (bytes / ops / p50 / p99 /
 degraded reads, straight off the global registry's ``tenant.*`` series),
-currently-active alerts, and the tail of the structured event log — one
-refreshing frame per interval.
+currently-active alerts, rebuild/scrub progress (per-seat progress bars off
+the :class:`~repro.array.rebuild.ArrayManager` plus the ``scrub.*``
+counters), and the tail of the structured event log — one refreshing frame
+per interval.
 
 The renderer is a pure function (:func:`render`) over whatever monitors /
 engine / log the caller hands it, so tests can assert on a frame without a
@@ -70,7 +72,7 @@ def tenant_rows(snapshot: dict) -> list[dict]:
 
 
 def render(*, monitor: ArrayHealthMonitor | None = None,
-           engine: AlertEngine | None = None,
+           engine: AlertEngine | None = None, manager=None,
            log=None, snapshot: dict | None = None, events_tail: int = 8,
            width: int = 78) -> str:
     """One dashboard frame as a string (no terminal control codes)."""
@@ -132,6 +134,33 @@ def render(*, monitor: ArrayHealthMonitor | None = None,
         lines.append(f"  last: [{last.severity.name}] {last.message[:width - 10]}")
     lines.append(thin)
 
+    lines.append("REBUILD / SCRUB")
+    seats = manager.status() if manager is not None else {}
+    if seats:
+        for member, st in sorted(seats.items()):
+            total = st.get("zones_total", 0)
+            done = st.get("zones_done", 0)
+            frac = done / total if total else 0.0
+            fill = int(round(frac * 20))
+            bar_s = "#" * fill + "." * (20 - fill)
+            lines.append(
+                f"  member {member} -> spare dev{st.get('spare', '?')}  "
+                f"{st.get('state', '?'):<9}[{bar_s}] {done}/{total} zones"
+                + (f"  restarts={st['restarts']}" if st.get("restarts") else "")
+                + (f"  failed={st['zones_failed']}"
+                   if st.get("zones_failed") else ""))
+    elif manager is not None:
+        lines.append("  (no rebuild has run)")
+    if manager is not None:
+        lines.append(
+            f"  spares available: {manager.spare_count}   scrub: "
+            f"passes={snap.get('scrub.passes', 0)} "
+            f"rows={snap.get('scrub.rows_verified', 0)} "
+            f"mismatches={snap.get('scrub.mismatches', 0)}")
+    else:
+        lines.append("  (no array manager attached)")
+    lines.append(thin)
+
     lines.append(f"EVENTS (last {events_tail})")
     tail = log.tail(events_tail)
     if tail:
@@ -146,9 +175,10 @@ def render(*, monitor: ArrayHealthMonitor | None = None,
 
 # ----------------------------------------------------------- demo workload
 def _demo(stop: threading.Event):
-    """Two tenants hammering a raid1 pair; one member zone dies mid-run.
-    Returns (monitor, engine, thread)."""
-    from repro.array import OffloadScheduler, StripedZoneArray
+    """Two tenants hammering a raid1 pair; a member dies mid-run and the
+    self-healing manager rebuilds it onto a hot spare while a background
+    scrub ticks. Returns (monitor, engine, manager, thread)."""
+    from repro.array import ArrayManager, OffloadScheduler, StripedZoneArray
     from repro.core import filter_count
     from repro.zns import ZonedDevice
 
@@ -169,6 +199,11 @@ def _demo(stop: threading.Event):
         ErrorRateRule(pattern="health.*_errors"),
         TenantLatencySLORule(0.5),
     ])
+    spare = ZonedDevice(num_zones=4, zone_bytes=data_bytes, block_bytes=4096,
+                        append_us_per_block=20.0)   # paced: progress visible
+    manager = ArrayManager(array, spares=[spare], monitor=monitor)
+    manager.attach(engine)
+    manager.start_scrub(interval=2.0)
 
     def loop():
         sched = OffloadScheduler(array)
@@ -180,13 +215,14 @@ def _demo(stop: threading.Event):
                 sched.nvm_cmd_bpf_run(program, 0,
                                       tenant="alice" if n % 4 else "bob")
                 n += 1
-                if n == 12:             # fault injection partway through
-                    array.set_offline(0, device=1)
+                if n == 12:             # fault injection: past the DEGRADED
+                    array.set_offline(0, device=1)  # threshold (2/4 zones),
+                    array.set_offline(1, device=1)  # so promotion fires
                 stop.wait(0.05)
 
     t = threading.Thread(target=loop, name="top-demo", daemon=True)
     t.start()
-    return monitor, engine, t
+    return monitor, engine, manager, t
 
 
 def main(argv=None) -> int:
@@ -202,13 +238,13 @@ def main(argv=None) -> int:
         args.frames = 1
 
     stop = threading.Event()
-    monitor, engine, worker = _demo(stop)
+    monitor, engine, manager, worker = _demo(stop)
     frames = 0
     try:
         while True:
             time.sleep(0.0 if args.once else args.interval)
             engine.evaluate()           # doubles as the SMART sampling tick
-            frame = render(monitor=monitor, engine=engine)
+            frame = render(monitor=monitor, engine=engine, manager=manager)
             if not args.once:
                 sys.stdout.write("\x1b[2J\x1b[H")   # clear + home
             print(frame, flush=True)
@@ -219,6 +255,7 @@ def main(argv=None) -> int:
         return 0
     finally:
         stop.set()
+        manager.stop()
         worker.join(timeout=5.0)
 
 

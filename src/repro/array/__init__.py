@@ -14,7 +14,11 @@ multi-device operation — built on the repo's single-device primitives:
     arbitration;
   * :mod:`repro.array.scheduler` — ``OffloadScheduler``: verify once, fan out
     per device (vmapped-JIT batching for same-shape shards), scatter-gather
-    with a program-aware combiner, aggregated ``ArrayOffloadStats``.
+    with a program-aware combiner, aggregated ``ArrayOffloadStats``;
+  * :mod:`repro.array.rebuild`   — ``ArrayManager``: hot spares, online
+    rebuild-to-spare on a metered ``"rebuild"`` tenant with per-zone
+    cutover, background parity/mirror scrub, and automatic spare promotion
+    off the alert engine's ``member_degraded`` incidents.
 """
 from repro.array.striping import (
     LogicalZone,
@@ -36,10 +40,12 @@ from repro.array.scheduler import (
     ArrayOffloadStats,
     OffloadScheduler,
 )
+from repro.array.rebuild import ArrayManager, RebuildError
 
 __all__ = [
     "StripedZoneArray", "LogicalZone", "StripeChunk", "REDUNDANCY_MODES",
     "SubmissionQueue", "CompletionQueue", "QueuePair", "QueueFullError",
     "OffloadCommand", "Completion", "WeightedRoundRobinArbiter",
     "OffloadScheduler", "ArrayOffloadStats", "ArrayOffloadError",
+    "ArrayManager", "RebuildError",
 ]

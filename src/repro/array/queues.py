@@ -82,6 +82,10 @@ class OffloadCommand:
     insns_verified: int = 0
     io_op: Optional[str] = None
     data: Optional[np.ndarray] = None
+    # raw I/O only: target ONE array member instead of the logical array —
+    # how rebuild/scrub traffic reaches an individual device while still
+    # riding the tenant SQs and WRR arbitration
+    member: Optional[int] = None
     on_complete: Optional[Callable[["Completion"], None]] = None
     # monotonic instant the command entered its SQ; the arbiter derives WRR
     # grant latency (SQ residency) from it

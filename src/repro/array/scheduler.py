@@ -325,6 +325,7 @@ class OffloadScheduler:
         n_blocks: Optional[int] = None,
         data: Optional[np.ndarray] = None,
         tenant: str = "default",
+        member: Optional[int] = None,
         block: bool = False,
         timeout: Optional[float] = None,
         on_complete=None,
@@ -338,12 +339,19 @@ class OffloadScheduler:
         (admission, felt when the dispatcher is busy executing offloads); the
         number of in-flight transfers is bounded by the device's per-zone
         clocks, not the queue — forwarded commands leave the SQ immediately.
+
+        ``member`` targets ONE array member instead of the logical array —
+        the rebuild/scrub path: member-local addressing, same tenant SQs,
+        same WRR metering against live offload traffic.
         """
         if io_op not in ("read", "append"):
             raise ValueError(f"unknown io_op {io_op!r}")
         pair = self._pairs[tenant]
         if io_op == "read":
-            zone = self.array.zone(zone_id)
+            if member is None:
+                zone = self.array.zone(zone_id)
+            else:
+                zone = self.array.devices[member].zone(zone_id)
             if n_blocks is None:
                 n_blocks = zone.write_pointer - block_off
             verify_zone_access(
@@ -354,7 +362,7 @@ class OffloadScheduler:
         cmd = OffloadCommand(
             program=None, zone_id=zone_id, block_off=block_off,
             n_blocks=n_blocks, tier=None, tenant=tenant,
-            io_op=io_op, data=data, on_complete=on_complete,
+            io_op=io_op, data=data, member=member, on_complete=on_complete,
         )
         with self._comp_cond:
             self._pending.add(cmd.cmd_id)
@@ -409,11 +417,13 @@ class OffloadScheduler:
         on the emulated transfer: the ring retires the completion, and the
         scheduler's completion bookkeeping runs from its done-callback."""
         try:
+            target = self.array if cmd.member is None \
+                else self.array.devices[cmd.member]
             if cmd.io_op == "append":
-                fut = self.array.submit_append(cmd.zone_id, cmd.data)
+                fut = target.submit_append(cmd.zone_id, cmd.data)
             else:
-                fut = self.array.submit_read(cmd.zone_id, cmd.block_off,
-                                             cmd.n_blocks)
+                fut = target.submit_read(cmd.zone_id, cmd.block_off,
+                                         cmd.n_blocks)
         except Exception as e:
             self._finish(cmd, pair, Completion(cmd.cmd_id, cmd.tenant, error=e))
             return

@@ -331,7 +331,9 @@ class LogicalZone:
         arr = self._array
         with arr._lock:
             states = [z.state for z in self._members()]
-            off = [i for i, s in enumerate(states) if s is ZoneState.OFFLINE]
+            reb = arr._rebuilding.get(self.zone_id)
+            off = [i for i, s in enumerate(states)
+                   if s is ZoneState.OFFLINE or i == reb]
             if arr._is_unrecoverable(off):
                 return ZoneState.OFFLINE
             if off or self.zone_id in arr._fenced:
@@ -351,9 +353,12 @@ class LogicalZone:
     @state.setter
     def state(self, st: ZoneState) -> None:
         with self._array._lock:
-            for z in self._members():
-                if z.state is ZoneState.OFFLINE:
-                    continue    # fault injection is not undone by a broadcast
+            reb = self._array._rebuilding.get(self.zone_id)
+            for i, z in enumerate(self._members()):
+                if z.state is ZoneState.OFFLINE or i == reb:
+                    # fault injection is not undone by a broadcast, and a
+                    # mid-rebuild member reconciles its state at cutover
+                    continue
                 z.state = st
 
     @property
@@ -460,6 +465,14 @@ class StripedZoneArray:
         # the first degraded read per zone is the operator-visible moment,
         # the per-read volume lives in the degraded_reads counter
         self._degraded_announced: set[int] = set()
+        # zones mid-rebuild: {zone_id: member index being reconstructed}.
+        # Planning treats the member as dead for these zones regardless of
+        # its actual zone state (the spare's zone is revived EMPTY while the
+        # copy runs), and the logical zone stays READ_ONLY — the write
+        # pointer must not move under an in-progress reconstruction. Each
+        # zone leaves the map individually at commit_member_rebuild, so
+        # rebuilt zones accept appends while later zones are still copying.
+        self._rebuilding: dict[int, int] = {}
         # member transfers fan out as in-flight completion-ring descriptors
         # (repro.zns.ring): an N-member read holds N reactor slots and ZERO
         # worker threads, and CONCURRENT logical reads (different zones /
@@ -485,8 +498,12 @@ class StripedZoneArray:
         return (col,)
 
     def _offline_members(self, zone_id: int) -> list[int]:
+        """Members the zone cannot be served from: actually-OFFLINE zones
+        plus the member a rebuild is reconstructing (its revived spare zone
+        holds no data yet)."""
+        reb = self._rebuilding.get(zone_id)
         return [i for i, d in enumerate(self.devices)
-                if d.zone(zone_id).state is ZoneState.OFFLINE]
+                if i == reb or d.zone(zone_id).state is ZoneState.OFFLINE]
 
     def _is_unrecoverable(self, offline: list[int]) -> bool:
         """True when the OFFLINE member set defeats the redundancy mode."""
@@ -544,8 +561,9 @@ class StripedZoneArray:
                      n_blocks: int) -> list[StripeChunk]:
         self.zone(zone_id)  # bounds-check the zone id
         s, C = self.stripe_blocks, self.data_columns
-        alive = [d.zone(zone_id).state is not ZoneState.OFFLINE
-                 for d in self.devices]
+        reb = self._rebuilding.get(zone_id)
+        alive = [i != reb and d.zone(zone_id).state is not ZoneState.OFFLINE
+                 for i, d in enumerate(self.devices)]
         out: list[StripeChunk] = []
         b, end = block_off, block_off + n_blocks
         while b < end:
@@ -665,6 +683,29 @@ class StripedZoneArray:
             flush(dev)
         return plan
 
+    def _refusal_detail(self, zone_id: int, state: ZoneState) -> str:
+        """Append-refusal message naming WHY the logical zone is not
+        writable — offline member indices, redundancy mode, rebuild/fence
+        status — so operators can correlate the refusal with
+        ``array.member_offline`` events instead of guessing. Caller holds
+        the array lock."""
+        clauses = [f"state={state}", f"redundancy={self.redundancy}"]
+        offline = [i for i, d in enumerate(self.devices)
+                   if d.zone(zone_id).state is ZoneState.OFFLINE]
+        if offline:
+            clauses.append(f"offline members={offline}")
+        reb = self._rebuilding.get(zone_id)
+        if reb is not None:
+            clauses.append(f"member {reb} rebuilding onto spare")
+        if zone_id in self._fenced:
+            clauses.append("fenced by a torn append")
+        hint = ""
+        if offline or reb is not None:
+            hint = (" — correlate with array.member_offline events; appends "
+                    "resume after rebuild-to-spare (or reset_zone)")
+        return (f"logical zone {zone_id} not writable "
+                f"({', '.join(clauses)}){hint}")
+
     def submit_append(self, zone_id: int, data: np.ndarray | bytes, *,
                       ring: Optional[CompletionRing] = None) -> IoFuture:
         """Asynchronous striped Zone Append: member writes land immediately
@@ -687,8 +728,7 @@ class StripedZoneArray:
         with self._lock:
             z = self.zone(zone_id)
             if not z.is_writable:
-                raise ZoneStateError(
-                    f"logical zone {zone_id} not writable (state={z.state})")
+                raise ZoneStateError(self._refusal_detail(zone_id, z.state))
             start = z.write_pointer
             if nblocks > z.remaining_blocks:
                 raise ZoneFullError(
@@ -957,6 +997,32 @@ class StripedZoneArray:
         return self.read_blocks(zone_id, 0, self.zone(zone_id).write_pointer)
 
     # ---------------------------------------------------- zone management
+    def _member_write_pointers(self, w: int) -> list[int]:
+        """Member write pointers implied by logical write pointer ``w``:
+        member ``d`` owns exactly the blocks its mode maps there (under xor
+        the parity chunks of FULL rows have landed, the tail row's has not).
+        Pure address math — also the rebuild target a reconstructed member
+        zone must reach before cutover."""
+        s, C = self.stripe_blocks, self.data_columns
+        full_rows, rem = divmod(int(w), s * C)
+        rem_chunks, partial = divmod(rem, s)
+
+        def tail(col: int) -> int:
+            if col < rem_chunks:
+                return s
+            return partial if col == rem_chunks else 0
+
+        if self.redundancy == "raid0":
+            return [full_rows * s + tail(c) for c in range(C)]
+        if self.redundancy == "raid1":
+            return [full_rows * s + tail(d // 2)
+                    for d in range(self.n_devices)]
+        data_devs, _parity = self._row_devices(full_rows)
+        wps = [full_rows * s] * self.n_devices
+        for c in range(C):
+            wps[data_devs[c]] += tail(c)
+        return wps
+
     def _set_write_pointer(self, zone_id: int, w: int) -> None:
         """Distribute a logical write pointer across members (checkpoint
         recovery): member ``d`` owns the blocks its mode maps there. Under
@@ -965,6 +1031,10 @@ class StripedZoneArray:
         members' data."""
         s, C = self.stripe_blocks, self.data_columns
         with self._lock:
+            if zone_id in self._rebuilding:
+                raise ZoneStateError(
+                    f"logical zone {zone_id} write pointer frozen: member "
+                    f"{self._rebuilding[zone_id]} rebuild in progress")
             full_rows, rem = divmod(int(w), s * C)
             rem_chunks, partial = divmod(rem, s)
 
@@ -973,24 +1043,11 @@ class StripedZoneArray:
                     return s
                 return partial if col == rem_chunks else 0
 
-            if self.redundancy == "raid0":
-                for c in range(C):
-                    self.devices[c].zone(zone_id).write_pointer = \
-                        full_rows * s + tail(c)
-            elif self.redundancy == "raid1":
-                for c in range(C):
-                    wp = full_rows * s + tail(c)
-                    self.devices[2 * c].zone(zone_id).write_pointer = wp
-                    self.devices[2 * c + 1].zone(zone_id).write_pointer = wp
-            else:
-                data_devs, _parity = self._row_devices(full_rows)
-                wps = [full_rows * s] * self.n_devices
-                for c in range(C):
-                    wps[data_devs[c]] += tail(c)
-                for d, wp in enumerate(wps):
-                    self.devices[d].zone(zone_id).write_pointer = wp
+            for d, wp in enumerate(self._member_write_pointers(w)):
+                self.devices[d].zone(zone_id).write_pointer = wp
             self._wp[zone_id] = int(w)
             if self.redundancy == "xor":
+                data_devs, _parity = self._row_devices(full_rows)
                 acc = self._pacc_for(zone_id)
                 acc[:] = 0
                 self._pacc_lost.discard(zone_id)
@@ -1019,11 +1076,14 @@ class StripedZoneArray:
         with self._lock:
             if self.zone(zone_id).state is ZoneState.OFFLINE:
                 raise ZoneStateError(f"logical zone {zone_id} is offline")
+            reb = self._rebuilding.get(zone_id)
             done = 0
             try:
-                for dev in self.devices:
-                    if dev.zone(zone_id).state is ZoneState.OFFLINE:
-                        continue    # degraded survivors still transition
+                for i, dev in enumerate(self.devices):
+                    if dev.zone(zone_id).state is ZoneState.OFFLINE or i == reb:
+                        # degraded survivors still transition; a mid-rebuild
+                        # member reconciles its state at cutover
+                        continue
                     fn(dev)
                     done += 1
             except ZNSError as e:
@@ -1073,6 +1133,227 @@ class StripedZoneArray:
             message=f"zone {zone_id} killed on member(s) {members} "
                     f"({self.redundancy})",
             zone=zone_id, members=members, redundancy=self.redundancy)
+
+    # ----------------------------------------------------- rebuild protocol
+    # The low-level contract ArrayManager (repro.array.rebuild) drives:
+    #   replace_member       swap a dead member for a spare, mark its zones
+    #   begin_member_rebuild revive ONE spare zone EMPTY, freeze the logical wp
+    #   <manager copies member_shard() bytes via ordinary appends>
+    #   commit_member_rebuild per-zone cutover under the array lock — the zone
+    #                        leaves the _rebuilding map (and thus READ_ONLY)
+    #                        while later zones are still copying
+    # Everything here is metadata under the array lock; the bulk copy itself
+    # is ordinary (meterable, failable) member I/O owned by the manager.
+
+    def replace_member(self, member: int, new_device: ZonedDevice) -> list[int]:
+        """Swap ``new_device`` (a hot spare) into seat ``member`` and return
+        the zone ids whose data must be reconstructed onto it.
+
+        Pending zones enter the ``_rebuilding`` map and the spare's zone is
+        parked OFFLINE (quietly — placeholder marking, not a health event)
+        until ``begin_member_rebuild`` revives it for the copy. Zones already
+        unrecoverable (xor double fault, both raid1 partners dead) are parked
+        offline on the spare and NOT returned — their data is gone, rebuild
+        cannot invent it. Replacing a member whose data is still live is
+        refused when another member is already offline and the swap would
+        turn a recoverable zone unrecoverable."""
+        if not 0 <= member < self.n_devices:
+            raise ValueError(f"member {member} out of range [0,{self.n_devices})")
+        d0 = self.devices[0]
+        if (new_device.num_zones, new_device.zone_blocks,
+                new_device.block_bytes) != (
+                d0.num_zones, d0.zone_blocks, d0.block_bytes):
+            raise ValueError(
+                f"spare geometry {(new_device.num_zones, new_device.zone_blocks, new_device.block_bytes)} "
+                f"differs from array {(d0.num_zones, d0.zone_blocks, d0.block_bytes)}")
+        with self._lock:
+            pending: list[int] = []
+            lost: list[int] = []
+            plans: list[tuple[int, bool]] = []   # (zone, recoverable)
+            for z in range(self.num_zones):
+                if self._wp[z] == 0:
+                    continue            # nothing landed: spare zone serves as-is
+                off_now = self._offline_members(z)
+                off_after = sorted(set(i for i in off_now if i != member)
+                                   | {member})
+                if self._is_unrecoverable(off_after):
+                    if not self._is_unrecoverable(off_now):
+                        # the seat still holds the only copy of live data —
+                        # pulling it is operator error, refuse atomically
+                        raise ZoneStateError(
+                            f"replacing member {member} would make zone {z} "
+                            f"unrecoverable (members {off_now} already "
+                            f"offline, redundancy={self.redundancy})")
+                    plans.append((z, False))
+                else:
+                    plans.append((z, True))
+            for z, recoverable in plans:
+                new_device.set_offline(z, quiet=True)
+                if recoverable:
+                    self._rebuilding[z] = member
+                    pending.append(z)
+                else:
+                    lost.append(z)
+            self.devices[member] = new_device
+        _publish_event(
+            "array.member_replaced", severity=_Sev.WARNING,
+            message=f"member {member} replaced by spare dev{new_device.dev_ordinal}: "
+                    f"{len(pending)} zone(s) pending rebuild"
+                    + (f", {len(lost)} unrecoverable" if lost else ""),
+            member=member, spare=new_device.dev_ordinal,
+            pending=len(pending), lost=lost, redundancy=self.redundancy)
+        return pending
+
+    def rebuilding_zones(self) -> dict[int, int]:
+        """Zones mid-rebuild as ``{zone_id: member index}`` (snapshot)."""
+        with self._lock:
+            return dict(self._rebuilding)
+
+    def begin_member_rebuild(self, zone_id: int) -> tuple[int, int]:
+        """Open one marked zone for reconstruction: revive the spare's
+        parked zone EMPTY and return ``(member, logical_wp)`` — the copy
+        target. Idempotent/restartable: a partially-copied zone (spare died
+        or the manager crashed mid-copy) is re-parked and revived, so the
+        copy always restarts from block 0."""
+        with self._lock:
+            member = self._rebuilding.get(zone_id)
+            if member is None:
+                raise ZoneStateError(
+                    f"zone {zone_id} is not marked for rebuild "
+                    f"(replace_member first)")
+            dev = self.devices[member]
+            mz = dev.zone(zone_id)
+            if mz.state is not ZoneState.OFFLINE and mz.write_pointer > 0:
+                dev.set_offline(zone_id, quiet=True)   # discard partial copy
+            if dev.zone(zone_id).state is ZoneState.OFFLINE:
+                dev.revive_zone(zone_id)
+            return member, self._wp[zone_id]
+
+    def commit_member_rebuild(self, zone_id: int) -> int:
+        """Per-zone cutover: verify the reconstructed member zone reached
+        exactly the write pointer the logical geometry implies, reconcile
+        its state with the survivors', and lift the zone out of the
+        ``_rebuilding`` map — appends resume here while later zones are
+        still copying. Returns the member index."""
+        with self._lock:
+            member = self._rebuilding.get(zone_id)
+            if member is None:
+                raise ZoneStateError(
+                    f"zone {zone_id} has no rebuild in progress to commit")
+            dev = self.devices[member]
+            mz = dev.zone(zone_id)
+            expect = self._member_write_pointers(self._wp[zone_id])[member]
+            if mz.state is ZoneState.OFFLINE or mz.write_pointer != expect:
+                raise ZoneStateError(
+                    f"rebuild cutover of zone {zone_id} refused: member "
+                    f"{member} at wp {mz.write_pointer} (state={mz.state}), "
+                    f"expected wp {expect}")
+            surv = {z.state for i, d in enumerate(self.devices)
+                    if i != member
+                    and (z := d.zone(zone_id)).state is not ZoneState.OFFLINE}
+            if ZoneState.READ_ONLY in surv:
+                dev.set_read_only(zone_id)
+            elif surv == {ZoneState.FULL} and mz.state is not ZoneState.FULL:
+                dev.finish_zone(zone_id)
+            del self._rebuilding[zone_id]
+            self._degraded_announced.discard(zone_id)
+        _publish_event(
+            "array.zone_rebuilt", severity=_Sev.INFO,
+            message=f"zone {zone_id} rebuilt onto member {member}: "
+                    f"writable again",
+            zone=zone_id, member=member, redundancy=self.redundancy)
+        return member
+
+    def abandon_member_rebuild(self, zone_id: int) -> None:
+        """Give up reconstructing one zone (double fault on the source
+        side): the partial copy is parked OFFLINE — a half-written member
+        must never serve reads — and the zone leaves the rebuild map, so
+        its logical state reflects the true member health."""
+        with self._lock:
+            member = self._rebuilding.pop(zone_id, None)
+            if member is None:
+                return
+            dev = self.devices[member]
+            if dev.zone(zone_id).state is not ZoneState.OFFLINE:
+                dev.set_offline(zone_id, quiet=True)
+
+    def member_shard(self, member: int, logical: np.ndarray, *,
+                     base_block: int = 0) -> np.ndarray:
+        """The byte stream member ``member`` stores for the logical extent
+        ``[base_block, base_block + len(logical))`` — the rebuild payload.
+
+        ``logical`` is ``(n, block_bytes)`` uint8 in logical block order;
+        ``base_block`` must be stripe-row aligned (a multiple of
+        ``stripe_blocks * data_columns``), so batched rebuild reads stay
+        row-aligned and the xor parity rotation lines up. raid0/raid1
+        members store their column's chunks verbatim; an xor member stores
+        its data chunks plus, on rows where the rotation makes it the
+        parity member, the XOR of the row's data chunks. The (at most one)
+        incomplete tail row contributes data chunks only — its parity
+        chunk has not landed (the host accumulator stands in for it)."""
+        s, C = self.stripe_blocks, self.data_columns
+        bb = self.block_bytes
+        if not 0 <= member < self.n_devices:
+            raise ValueError(f"member {member} out of range [0,{self.n_devices})")
+        if base_block % (s * C):
+            raise ValueError(
+                f"base_block {base_block} not stripe-row aligned "
+                f"(row = {s * C} blocks)")
+        logical = np.ascontiguousarray(logical).reshape(-1, bb)
+        n = len(logical)
+        full_rows, rem = divmod(n, s * C)
+        rem_chunks, partial = divmod(rem, s)
+
+        def tail(col: int) -> int:
+            if col < rem_chunks:
+                return s
+            return partial if col == rem_chunks else 0
+
+        parts: list[np.ndarray] = []
+        if self.redundancy != "xor":
+            col = member if self.redundancy == "raid0" else member // 2
+            for r in range(full_rows):
+                base = (r * C + col) * s
+                parts.append(logical[base: base + s])
+            t = tail(col)
+            if t:
+                base = full_rows * s * C + col * s
+                parts.append(logical[base: base + t])
+        else:
+            row0 = base_block // (s * C)
+            for r in range(full_rows):
+                data_devs, parity = self._row_devices(row0 + r)
+                base = r * s * C
+                if member == parity:
+                    chunk = logical[base: base + s].copy()
+                    for c in range(1, C):
+                        chunk ^= logical[base + c * s: base + (c + 1) * s]
+                    parts.append(chunk)
+                else:
+                    c = data_devs.index(member)
+                    parts.append(logical[base + c * s: base + (c + 1) * s])
+            if rem:
+                data_devs, parity = self._row_devices(row0 + full_rows)
+                if member != parity:
+                    c = data_devs.index(member)
+                    t = tail(c)
+                    if t:
+                        base = full_rows * s * C + c * s
+                        parts.append(logical[base: base + t])
+        if not parts:
+            return np.empty((0, bb), np.uint8)
+        return np.concatenate(parts)
+
+    def tail_parity(self, zone_id: int) -> Optional[np.ndarray]:
+        """Snapshot of the host-side tail-row parity accumulator (xor mode):
+        the value the incomplete row's parity chunk WILL have once the row
+        completes — what a scrub checks the tail data against. ``None`` for
+        non-xor arrays and for zones whose accumulator was lost at recovery
+        (``_pacc_lost``)."""
+        with self._lock:
+            if self.redundancy != "xor" or zone_id in self._pacc_lost:
+                return None
+            return self._pacc_for(zone_id).copy()
 
     # --------------------------------------------------------------- misc
     def flush(self) -> None:

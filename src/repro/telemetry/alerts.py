@@ -249,6 +249,12 @@ class AlertEngine:
         self._last_eval = time.monotonic()
         self._last_seq = self.events.last_seq()
         self._lock = threading.Lock()
+        # serializes whole evaluations: _active (incident edge state) is
+        # read-modify-written across the rule loop, so two overlapping
+        # evaluate() calls (background sampler + an explicit call, or a
+        # callback that re-enters) could otherwise interleave and lose a
+        # clear — suppressing the incident's alert.resolved
+        self._eval_lock = threading.Lock()
         self._thread: Optional[threading.Thread] = None
         self._stop = threading.Event()
 
@@ -273,7 +279,15 @@ class AlertEngine:
     # ----------------------------------------------------------- evaluation
     def evaluate(self) -> list[Alert]:
         """Run every rule once; returns the alerts that fired *this* pass
-        (incidents newly active since the previous pass)."""
+        (incidents newly active since the previous pass). Evaluations are
+        serialized; callback exceptions are isolated exactly like rule
+        exceptions (published as ``alert.callback_error`` events), so a
+        broken consumer can neither wedge rule evaluation nor suppress a
+        later ``alert.resolved``."""
+        with self._eval_lock:
+            return self._evaluate_locked()
+
+    def _evaluate_locked(self) -> list[Alert]:
         with self._lock:
             now = time.monotonic()
             snap = self.metrics.snapshot()
@@ -319,8 +333,17 @@ class AlertEngine:
             for fn in callbacks:
                 try:
                     fn(alert)
-                except Exception:
-                    pass            # consumer bugs stay the consumer's
+                except Exception as e:
+                    # consumer bugs stay the consumer's — but not silently:
+                    # a dead promotion hook is itself an operator incident
+                    self.events.publish(
+                        "alert.callback_error", severity=Severity.ERROR,
+                        message=f"on_alert callback "
+                                f"{getattr(fn, '__name__', repr(fn))} raised "
+                                f"{type(e).__name__} for {alert.rule}/"
+                                f"{alert.key}: {e}",
+                        rule=alert.rule, incident=alert.key,
+                        error=type(e).__name__)
         return new_alerts
 
     def active(self, rule: Optional[str] = None) -> dict[str, set[str]]:

@@ -67,7 +67,10 @@ class HealthStatus(enum.IntEnum):
     OFFLINE = 3
 
 
-_ERROR_KEYS = ("read_errors", "append_errors")
+# scrub_mismatches: parity/mirror inconsistencies the background scrub
+# (repro.array.rebuild) charged to this device — silent corruption counts
+# as a media error for classification, same as an explicit read error
+_ERROR_KEYS = ("read_errors", "append_errors", "scrub_mismatches")
 _OPS_KEYS = ("blocks_read", "blocks_appended")
 
 
@@ -222,6 +225,7 @@ class DeviceHealthMonitor:
                 "blocks_appended": snap.get("blocks_appended", 0),
                 "read_errors": snap.get("read_errors", 0),
                 "append_errors": snap.get("append_errors", 0),
+                "scrub_mismatches": snap.get("scrub_mismatches", 0),
                 "media_errors": sum(snap.get(k, 0) for k in _ERROR_KEYS),
                 "zone_resets": snap.get("zone_resets", 0),
                 "zone_readonly_transitions":

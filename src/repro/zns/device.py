@@ -530,19 +530,40 @@ class ZonedDevice:
             z.reset_count += 1
             self._c_zone_resets.inc()
 
-    def set_offline(self, zone_id: int) -> None:
-        """Fault injection: mark a zone dead (used by fault-tolerance tests)."""
+    def set_offline(self, zone_id: int, *, quiet: bool = False) -> None:
+        """Fault injection: mark a zone dead (used by fault-tolerance tests).
+
+        ``quiet=True`` marks the zone OFFLINE as a *placeholder* — the array
+        manager parks a hot spare's zones this way until rebuild delivers
+        their data — so neither the SMART ``zone_offline_transitions``
+        counter nor the ``zone.offline`` event fires: the spare did not
+        fail, it just must not serve reads it does not hold yet."""
         with self._lock:
             z = self.zone(zone_id)
             changed = z.state is not ZoneState.OFFLINE
             z.state = ZoneState.OFFLINE
-            if changed:
+            if changed and not quiet:
                 self._c_zone_off_transitions.inc()
-        if changed:
+        if changed and not quiet:
             _publish_event(
                 "zone.offline", severity=_Sev.ERROR,
                 message=f"dev{self.dev_ordinal} zone {zone_id} -> OFFLINE",
                 device=f"dev{self.dev_ordinal}", zone=zone_id)
+
+    def revive_zone(self, zone_id: int) -> None:
+        """Bring an OFFLINE zone back as EMPTY with a rewound write pointer —
+        the media-replacement primitive rebuild-to-spare needs (the spare's
+        placeholder zones are revived one at a time as reconstruction
+        reaches them). Only OFFLINE zones revive: any other state holds live
+        protocol state a silent rewind would corrupt."""
+        with self._lock:
+            z = self.zone(zone_id)
+            if z.state is not ZoneState.OFFLINE:
+                raise ZoneStateError(
+                    f"zone {zone_id} not offline (state={z.state}): only "
+                    f"offline zones can be revived")
+            z.write_pointer = 0
+            z.state = ZoneState.EMPTY
 
     # ------------------------------------------------------------------ misc
     def flush(self) -> None:

@@ -309,6 +309,33 @@ class TestAlertEngine:
         reg.counter("x_errors").inc()
         assert [a.rule for a in engine.evaluate()] == ["error_rate"]
 
+    def test_broken_callback_does_not_wedge_evaluation(self):
+        """A raising on_alert callback (e.g. a promotion handler hitting an
+        exhausted spare pool) must be isolated like a raising rule: the
+        other callbacks still run, evaluate() returns normally, and the
+        incident still clears with ``alert.resolved`` later."""
+        engine, reg, log = self._engine([ErrorRateRule()])
+        seen: list = []
+
+        def broken(alert):
+            raise RuntimeError("promotion handler crashed")
+
+        engine.on_alert(broken)
+        engine.on_alert(seen.append)            # registered AFTER the bomb
+        c = reg.counter("read_errors")
+        engine.evaluate()                       # baseline
+        c.inc(2)
+        fired = engine.evaluate()               # must not raise
+        assert [a.rule for a in fired] == ["error_rate"]
+        assert len(seen) == 1                   # later callback still ran
+        errs = log.snapshot(name="alert.callback_error")
+        assert errs and errs[0].tags["rule"] == "error_rate"
+        assert "broken" in errs[0].message
+        # growth stopped: the incident must still resolve on the next sweep
+        engine.evaluate()
+        assert log.snapshot(name="alert.resolved")
+        assert engine.active("error_rate")["error_rate"] == set()
+
 
 # ------------------------------------------------------- queue event hooks
 class TestQueueEvents:
