@@ -19,7 +19,7 @@ test-all:
 	python -m pytest -x -q
 
 smoke:
-	python benchmarks/run.py --only filter,array,hotpath,async,degraded,health,rebuild --json
+	python benchmarks/run.py --only filter,array,hotpath,async,degraded,health,rebuild,faults --json
 
 # hot-path regression tripwire: the CI-size suites must fit the wall-clock
 # budget (measured ~10s on 2 cores incl. compiles; ~9x headroom so only a
@@ -38,8 +38,13 @@ smoke:
 # rebuild suite asserts unattended recovery (member death -> alert-path
 # spare promotion -> online rebuild concurrent with bit-identical offloads
 # -> writable zones -> clean scrub) and the xor double-fault containment.
+# The faults suite asserts the transient-error tripwires: 1%/5% injected
+# read-error rates leave offload results bit-identical with bounded p99 and
+# nobody ejected, the retry-storm rule pages, and the power-loss crash
+# sweep recovers a committed checkpoint (or refuses cleanly) at every
+# member append-completion boundary.
 bench-smoke:
-	python benchmarks/run.py --only filter,array,async,degraded,profile,health,rebuild --budget 120
+	python benchmarks/run.py --only filter,array,async,degraded,profile,health,rebuild,faults --budget 120
 
 # tiny traced offload, then validate the exported Chrome trace-event JSON
 # (Perfetto-loadable): the end-to-end check that virtual device tracks and

@@ -1,0 +1,233 @@
+"""Fault injection: the datapath rides through transient errors, loud in CI.
+
+The retry/timeout machinery is only trustworthy if injected faults change
+NOTHING observable but latency — same offload answers, same bytes, nobody
+ejected — and if the operator-facing signals (retry counters, retry-storm
+alert, crash-consistency sweep) actually fire. Every stage is a hard
+tripwire (same posture as ``bench_health``/``bench_rebuild``):
+
+  * **clean baseline** — an 8-member raid1 array serving offloads with no
+    injector attached (the fast path: zero fault branches taken);
+  * **1% / 5% transient media errors** — the same workload with seeded
+    read-error injection and a bounded-retry policy: every offload result
+    must equal the healthy answer, every zone must read back bit-identical,
+    retries must have been absorbed (5% run), no member may leave the
+    HEALTHY/SUSPECT band, and p99 must stay within a generous factor of the
+    clean baseline (retries cost backoff, not correctness);
+  * **retry storm** — a high-rate burst trips the default
+    :func:`retry_storm_rule` through the :class:`AlertEngine` (the pager
+    fires BEFORE any budget exhausts into ``read_errors``);
+  * **crash sweep** — a :class:`PowerLossHarness` pass over a striped
+    checkpoint workload: power loss between every pair of member append
+    completions recovers to a committed checkpoint or refuses cleanly —
+    never a torn restore.
+"""
+from __future__ import annotations
+
+import tempfile
+import time
+
+import numpy as np
+
+from repro.array import OffloadScheduler, StripedZoneArray
+from repro.core import filter_count
+from repro.faults import FaultInjector, FaultSpec, RetryPolicy
+from repro.faults.crash import PowerLossHarness
+from repro.telemetry import (
+    AlertEngine,
+    ArrayHealthMonitor,
+    HealthStatus,
+    registry,
+    retry_storm_rule,
+)
+from repro.zns import ZonedDevice
+
+RAND_MAX = 2**31 - 1
+BLOCK = 4096
+N_DEVICES = 8
+SEED = 2112
+# generous CI bound: backoff + retried transfers, not a hang or a storm
+MAX_P99_FACTOR = 50.0
+MAX_P99_FLOOR_S = 0.25
+
+
+def _mk_array(num_zones: int, member_zone_bytes: int, *,
+              read_us_per_block: float = 0.5) -> StripedZoneArray:
+    devices = [ZonedDevice(num_zones=num_zones,
+                           zone_bytes=member_zone_bytes, block_bytes=BLOCK,
+                           read_us_per_block=read_us_per_block)
+               for _ in range(N_DEVICES)]
+    return StripedZoneArray(devices, stripe_blocks=64, redundancy="raid1")
+
+
+def _workload(array: StripedZoneArray, program, expected, baseline,
+              runs: int) -> list[float]:
+    """Offload every zone ``runs`` times; assert answers and bytes match
+    the healthy truth. Returns per-op wall seconds."""
+    lat = []
+    with OffloadScheduler(array) as sched:
+        sched.register_tenant("bench")
+        for _ in range(runs):
+            for z in range(len(expected)):
+                t0 = time.perf_counter()
+                sched.nvm_cmd_bpf_run(program, z, tenant="bench")
+                lat.append(time.perf_counter() - t0)
+                got = int(sched.nvm_cmd_bpf_result())
+                assert got == expected[z], (
+                    f"offload under faults differs from healthy answer: "
+                    f"zone {z} got {got} want {expected[z]}")
+    for z in range(len(expected)):
+        assert np.array_equal(array.read_zone(z), baseline[z]), \
+            f"zone {z} not bit-identical under fault injection"
+    return lat
+
+
+def run_injected(*, data_mib: int = 8, runs: int = 3) -> dict:
+    """Clean vs 1% vs 5% injected read-error rate on an 8-member raid1."""
+    member_zone_bytes = max(64 * BLOCK,
+                            data_mib * 1024 * 1024 // (N_DEVICES // 2))
+    num_zones = 2
+    rng = np.random.default_rng(0)
+    program = filter_count("int32", "gt", RAND_MAX // 2)
+
+    def build(rate: float):
+        array = _mk_array(num_zones, member_zone_bytes)
+        expected, baseline = [], []
+        for z in range(num_zones):
+            data = rng.integers(0, RAND_MAX,
+                                array.zone_blocks * BLOCK // 8,
+                                dtype=np.int32)   # half of each logical zone
+            array.zone_append(z, data)
+            expected.append(int((data > RAND_MAX // 2).sum()))
+            baseline.append(array.read_zone(z).copy())
+        injector = None
+        if rate > 0:
+            # fills above ran clean; only the offload reads see faults
+            injector = FaultInjector(SEED, FaultSpec(read_error_rate=rate))
+            injector.attach_array(array, policy=RetryPolicy(
+                max_attempts=6, backoff_base_s=50e-6))
+        return array, expected, baseline, injector
+
+    out: dict = {}
+    for label, rate in (("clean", 0.0), ("1pct", 0.01), ("5pct", 0.05)):
+        array, expected, baseline, injector = build(rate)
+        lat = _workload(array, program, expected, baseline, runs)
+        stats = [d.stats for d in array.devices]
+        res = {
+            "p50_s": float(np.percentile(lat, 50)),
+            "p99_s": float(np.percentile(lat, 99)),
+            "ops": len(lat),
+            "injected": sum(s["faults_injected"] for s in stats),
+            "retries": sum(s["retries"] for s in stats),
+            "timeouts": sum(s["io_timeouts"] for s in stats),
+            "exhausted": sum(s["read_errors"] + s["append_errors"]
+                             for s in stats),
+        }
+        if rate > 0:
+            monitor = ArrayHealthMonitor(array)
+            worst = max(m.sample() for m in monitor.members)
+            assert worst <= HealthStatus.SUSPECT, (
+                f"{label}: member left the serving band under transient "
+                f"faults (worst={worst.name})")
+            assert res["exhausted"] == 0, (
+                f"{label}: {res['exhausted']} retry budget(s) exhausted — "
+                f"a member would have been declared dead")
+            assert sum(1 for z in range(num_zones)
+                       if array.zone(z).state.value == "offline") == 0
+            res["worst_health"] = worst.name
+        if rate >= 0.05:
+            assert res["injected"] > 0 and res["retries"] > 0, (
+                f"{label}: injector armed but nothing injected/retried "
+                f"({res['injected']}/{res['retries']}) — dead code?")
+        out[label] = res
+    bound = max(MAX_P99_FACTOR * out["clean"]["p99_s"], MAX_P99_FLOOR_S)
+    for label in ("1pct", "5pct"):
+        assert out[label]["p99_s"] <= bound, (
+            f"{label}: offload p99 {out[label]['p99_s'] * 1e3:.1f}ms exceeds "
+            f"{MAX_P99_FACTOR:g}x clean baseline "
+            f"{out['clean']['p99_s'] * 1e3:.1f}ms")
+    return out
+
+
+def run_retry_storm() -> dict:
+    """A high-rate transient burst pages through the retry-storm rule."""
+    zone_bytes = 256 * BLOCK
+    devices = [ZonedDevice(num_zones=2, zone_bytes=zone_bytes,
+                           block_bytes=BLOCK) for _ in range(2)]
+    array = StripedZoneArray(devices, stripe_blocks=64, redundancy="raid1")
+    data = np.random.default_rng(2).integers(0, RAND_MAX, zone_bytes // 4,
+                                             dtype=np.int32)
+    array.zone_append(0, data)
+    injector = FaultInjector(SEED, FaultSpec(read_error_rate=0.3))
+    injector.attach_array(array, policy=RetryPolicy(max_attempts=10,
+                                                    backoff_base_s=0.0))
+    monitor = ArrayHealthMonitor(array)
+    monitor.register_on(registry())
+    engine = AlertEngine(rules=[retry_storm_rule()])
+    assert not any(a.rule == "retry_storm" for a in engine.evaluate())
+
+    t0 = time.perf_counter()
+    for _ in range(20):
+        array.read_blocks(0, 0, array.zone_blocks // 4)
+    for m in monitor.members:
+        m.sample()
+    fired = engine.evaluate()
+    elapsed = time.perf_counter() - t0
+    retries = sum(d.stats["retries"] for d in array.devices)
+    assert retries > 0, "30% injection produced zero retries"
+    assert any(a.rule == "retry_storm" for a in fired), (
+        f"retry-storm rule did not fire ({retries} retries absorbed; "
+        f"fired={[(a.rule, a.key) for a in fired]})")
+    return {"elapsed_s": elapsed, "retries": retries,
+            "alerts": sum(1 for a in fired if a.rule == "retry_storm")}
+
+
+def run_crash_sweep(*, stride: int = 1) -> dict:
+    """Power loss at every member append-completion boundary of a striped
+    checkpoint workload recovers clean (see repro.faults.crash)."""
+    t0 = time.perf_counter()
+    with tempfile.TemporaryDirectory() as td:
+        h = PowerLossHarness(td, num_devices=4, num_zones=6,
+                             member_zone_bytes=256 * 1024, stripe_blocks=4,
+                             redundancy="raid1", stride=stride)
+        trees = [(s, {"w": np.arange(700, dtype=np.float32) + s,
+                      "b": np.full((41,), s, dtype=np.int32)})
+                 for s in (1, 2, 3)]
+        h.run(trees)                       # raises on any torn recovery
+        summary = h.summary()
+    assert summary["all_ok"] and summary["boundaries"] >= 2
+    summary["elapsed_s"] = time.perf_counter() - t0
+    return summary
+
+
+def main(data_mib: int = 8, runs: int = 3, stride: int = 1) -> list[str]:
+    rows = []
+    inj = run_injected(data_mib=data_mib, runs=runs)
+    for label in ("clean", "1pct", "5pct"):
+        r = inj[label]
+        rows.append(
+            f"faults_{label},{r['p99_s'] * 1e6:.0f},"
+            f"p50_us={r['p50_s'] * 1e6:.0f};ops={r['ops']};"
+            f"injected={r['injected']};retries={r['retries']};"
+            f"timeouts={r['timeouts']};exhausted={r['exhausted']}"
+            + (f";worst_health={r['worst_health']}" if label != "clean"
+               else ";bitwise=identical")
+        )
+    s = run_retry_storm()
+    rows.append(
+        f"faults_retry_storm,{s['elapsed_s'] * 1e6:.0f},"
+        f"retries={s['retries']};alerts={s['alerts']};outcome=paged"
+    )
+    c = run_crash_sweep(stride=stride)
+    rows.append(
+        f"faults_crash_sweep,{c['elapsed_s'] * 1e6:.0f},"
+        f"boundaries={c['boundaries']};journal={c['journal_len']};"
+        f"restores={c['restores']};refusals={c['refusals']};"
+        f"outcome=never_torn"
+    )
+    return rows
+
+
+if __name__ == "__main__":
+    for row in main():
+        print(row)

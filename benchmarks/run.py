@@ -6,8 +6,9 @@ Prints ``name,us_per_call,derived`` CSV lines. Scaled-down sizes by default
 ``BENCH_hotpath.json`` trajectory (per-suite rows with parsed derived
 metrics) — plus ``BENCH_async.json`` for the async completion-ring suite,
 ``BENCH_degraded.json`` for the redundancy / degraded-read suite,
-``BENCH_profile.json`` for the traced fan-out profile and
-``BENCH_rebuild.json`` for the self-healing recovery suite when they ran — so
+``BENCH_profile.json`` for the traced fan-out profile,
+``BENCH_rebuild.json`` for the self-healing recovery suite and
+``BENCH_faults.json`` for the fault-injection suite when they ran — so
 the perf trajectory is machine-readable across PRs (legacy single-object
 files are migrated into trajectories on first write; see
 ``benchmarks/trajectory.py``); ``--budget SECONDS`` fails the run loudly
@@ -27,6 +28,7 @@ DEGRADED_JSON_PATH = "BENCH_degraded.json"
 PROFILE_JSON_PATH = "BENCH_profile.json"
 HEALTH_JSON_PATH = "BENCH_health.json"
 REBUILD_JSON_PATH = "BENCH_rebuild.json"
+FAULTS_JSON_PATH = "BENCH_faults.json"
 
 
 def _parse_derived(derived: str) -> dict:
@@ -64,7 +66,7 @@ def main() -> int:
     ap.add_argument("--only", default=None,
                     help="comma-separated subset: filter,hotpath,toolchain,"
                          "pushdown,checkpoint,paged_attn,roofline,array,"
-                         "async,degraded,profile,health,rebuild")
+                         "async,degraded,profile,health,rebuild,faults")
     ap.add_argument("--list", action="store_true",
                     help="print the available suite names and exit")
     ap.add_argument("--json", action="store_true",
@@ -74,10 +76,10 @@ def main() -> int:
     args = ap.parse_args()
 
     from benchmarks import (bench_array, bench_async, bench_checkpoint,
-                            bench_degraded, bench_filter, bench_health,
-                            bench_hotpath, bench_paged_attn, bench_profile,
-                            bench_pushdown, bench_rebuild, bench_toolchain,
-                            roofline, trajectory)
+                            bench_degraded, bench_faults, bench_filter,
+                            bench_health, bench_hotpath, bench_paged_attn,
+                            bench_profile, bench_pushdown, bench_rebuild,
+                            bench_toolchain, roofline, trajectory)
 
     suites = {
         "filter": lambda: bench_filter.main(
@@ -96,6 +98,9 @@ def main() -> int:
             data_mib=8 if args.full else 4, runs=5 if args.full else 3),
         "rebuild": lambda: bench_rebuild.main(
             data_mib=16 if args.full else 8, runs=5 if args.full else 3),
+        "faults": lambda: bench_faults.main(
+            data_mib=16 if args.full else 8, runs=5 if args.full else 3,
+            stride=1 if args.full else 2),
         "toolchain": bench_toolchain.main,
         "pushdown": bench_pushdown.main,
         "checkpoint": bench_checkpoint.main,
@@ -144,7 +149,8 @@ def main() -> int:
                             ("degraded", DEGRADED_JSON_PATH),
                             ("profile", PROFILE_JSON_PATH),
                             ("health", HEALTH_JSON_PATH),
-                            ("rebuild", REBUILD_JSON_PATH)):
+                            ("rebuild", REBUILD_JSON_PATH),
+                            ("faults", FAULTS_JSON_PATH)):
             if suite not in results:
                 continue
             trajectory.append_entry(path, {"suites": {suite: results[suite]},

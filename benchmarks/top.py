@@ -34,6 +34,7 @@ from repro.telemetry import (
     TenantLatencySLORule,
     event_log,
     registry,
+    retry_storm_rule,
 )
 
 _STATUS_GLYPH = {"HEALTHY": "ok", "SUSPECT": "??", "DEGRADED": "!!",
@@ -102,6 +103,23 @@ def render(*, monitor: ArrayHealthMonitor | None = None,
                 f"{smart['read_p99_s'] * 1e6:>9.0f}u")
     else:
         lines.append("  (no array monitor attached)")
+    lines.append(thin)
+
+    lines.append("FAULTS")
+    smarts = monitor.smart_logs() if monitor is not None else []
+    if any(s.get("faults_injected") or s.get("retries")
+           or s.get("io_timeouts") for s in smarts):
+        lines.append(f"  {'member':<18}{'injected':>9}{'retried':>9}"
+                     f"{'timed-out':>10}{'exhausted':>10}")
+        for smart in smarts:
+            lines.append(
+                f"  {smart['device']:<18}"
+                f"{smart.get('faults_injected', 0):>9}"
+                f"{smart.get('retries', 0):>9}"
+                f"{smart.get('io_timeouts', 0):>10}"
+                f"{smart['media_errors']:>10}")
+    else:
+        lines.append("  (no faults injected)")
     lines.append(thin)
 
     lines.append("TENANTS")
@@ -180,6 +198,7 @@ def _demo(stop: threading.Event):
     scrub ticks. Returns (monitor, engine, manager, thread)."""
     from repro.array import ArrayManager, OffloadScheduler, StripedZoneArray
     from repro.core import filter_count
+    from repro.faults import FaultInjector, FaultSpec, RetryPolicy
     from repro.zns import ZonedDevice
 
     data_bytes = 2 * 1024 * 1024
@@ -190,6 +209,11 @@ def _demo(stop: threading.Event):
                for _ in range(2)]
     array = StripedZoneArray(devices, stripe_blocks=64, redundancy="raid1")
     array.zone_append(0, data)
+    # transient media errors on the datapath, absorbed by bounded retries —
+    # feeds the FAULTS pane and the retry-storm alert without ejecting anyone
+    injector = FaultInjector(7, FaultSpec(read_error_rate=0.02))
+    injector.attach_array(array, policy=RetryPolicy(max_attempts=4,
+                                                    backoff_base_s=50e-6))
     program = filter_count("int32", "gt", 2**30)
 
     monitor = ArrayHealthMonitor(array)
@@ -197,6 +221,7 @@ def _demo(stop: threading.Event):
     engine = AlertEngine(rules=[
         HealthPromotionRule(monitor),
         ErrorRateRule(pattern="health.*_errors"),
+        retry_storm_rule(max_per_second=5.0),
         TenantLatencySLORule(0.5),
     ])
     spare = ZonedDevice(num_zones=4, zone_bytes=data_bytes, block_bytes=4096,

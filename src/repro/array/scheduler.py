@@ -67,6 +67,7 @@ from repro.array.queues import (
     WeightedRoundRobinArbiter,
 )
 from repro.array.striping import StripeChunk, StripedZoneArray
+from repro.faults.errors import TransientIOError
 from repro.zns.device import ZNSError, block_aligned_dtype
 
 __all__ = ["OffloadScheduler", "ArrayOffloadStats", "ArrayOffloadError"]
@@ -199,6 +200,7 @@ class OffloadScheduler:
         completion_backlog: int = 1024,
         cache: Optional[CompiledProgramCache] = None,
         prefetch_depth: int = 2,
+        io_timeout_s: Optional[float] = None,
     ):
         if array.stripe_blocks % pages_per_read:
             raise ValueError(
@@ -212,6 +214,10 @@ class OffloadScheduler:
         self.queue_depth = queue_depth
         self.completion_backlog = completion_backlog
         self.prefetch_depth = int(prefetch_depth)
+        # per-op join patience for chunk reads: a hung member completion
+        # surfaces as a diagnostic TimeoutError naming the stuck transfer
+        # instead of stranding a worker forever (None = wait indefinitely)
+        self.io_timeout_s = io_timeout_s
         self._pool = concurrent.futures.ThreadPoolExecutor(
             max_workers=max_workers or max(array.n_devices, 1))
         # ONE cache for every tier and batch shape; programs are
@@ -427,6 +433,7 @@ class OffloadScheduler:
         except Exception as e:
             self._finish(cmd, pair, Completion(cmd.cmd_id, cmd.tenant, error=e))
             return
+        fut.tenant = cmd.tenant    # stuck-op diagnostics name the owner
         fut.add_done_callback(lambda f: self._finish(
             cmd, pair,
             Completion(cmd.cmd_id, cmd.tenant,
@@ -643,7 +650,7 @@ class OffloadScheduler:
         with _trace.span("offload.plan"):
             try:
                 chunks = array.chunks(zone_id, cmd.block_off, cmd.n_blocks)
-            except ZNSError as e:
+            except (ZNSError, TransientIOError) as e:
                 # the PR 2 clean-error contract: callers handle degraded/
                 # failed offloads via ArrayOffloadError, whether one raid0
                 # member died or the loss defeated the redundancy mode
@@ -753,7 +760,7 @@ class OffloadScheduler:
                     stripe // self.pages_per_read)
                 run.batched += len(full)
                 run.degraded += sum(1 for c in full if c.degraded)
-            except ZNSError as e:
+            except (ZNSError, TransientIOError) as e:
                 # the member died mid-batch: re-run its chunks one by one so
                 # each can fall back to degraded reconstruction
                 self._member_failed(dev_idx, zone_id, e)
@@ -771,7 +778,7 @@ class OffloadScheduler:
                 recon_futs.append(
                     (c, self.array.submit_read(zone_id, c.logical_off,
                                                c.n_blocks)))
-            except ZNSError as e:
+            except (ZNSError, TransientIOError) as e:
                 raise ArrayOffloadError(
                     f"offload failed: chunk {c.index} of zone {zone_id} is "
                     f"unrecoverable under {self.array.redundancy}: {e}"
@@ -783,7 +790,7 @@ class OffloadScheduler:
                     tier=tier, pages_per_read=self.pages_per_read,
                     cache=self.cache, prefetch_depth=self.prefetch_depth,
                 )
-            except ZNSError as e:
+            except (ZNSError, TransientIOError) as e:
                 self._member_failed(dev_idx, zone_id, e)
                 self._run_chunk_degraded(zone_id, c, program, tier, run)
                 continue
@@ -804,7 +811,8 @@ class OffloadScheduler:
         run.overlap_s = max(run.read_s + run.compute_s - max(wall, 0.0), 0.0)
         return run
 
-    def _member_failed(self, dev_idx: int, zone_id: int, e: ZNSError) -> None:
+    def _member_failed(self, dev_idx: int, zone_id: int,
+                   e: Exception) -> None:
         """Raise the PR 2 clean degradation error when the array has no
         redundancy to absorb the member failure; otherwise return and let
         the caller reconstruct."""
@@ -828,8 +836,8 @@ class OffloadScheduler:
             if fut is None:
                 fut = self.array.submit_read(zone_id, c.logical_off,
                                              c.n_blocks)
-            flat = np.asarray(fut.result())
-        except ZNSError as e:
+            flat = np.asarray(fut.result(self.io_timeout_s))
+        except (ZNSError, TransientIOError) as e:
             raise ArrayOffloadError(
                 f"offload failed: chunk {c.index} of zone {zone_id} is "
                 f"unrecoverable under {self.array.redundancy}: {e}"
@@ -920,10 +928,10 @@ class OffloadScheduler:
             t_w = time.perf_counter()
             with _trace.span("worker.read_wait", group=len(group)):
                 if isinstance(fut, list):
-                    raws = [f.result() for f in fut]
+                    raws = [f.result(self.io_timeout_s) for f in fut]
                     run.read_s += sum(f.service_seconds for f in fut)
                 else:
-                    raw = fut.result()
+                    raw = fut.result(self.io_timeout_s)
                     # emulated transfer time of this group (the time the ring
                     # hid under earlier groups' execution; same meaning the
                     # thread-backed fetch wall-clock had)

@@ -599,15 +599,18 @@ class StripedZoneArray:
         return acc
 
     # ------------------------------------------------------------- append
-    def zone_append(self, zone_id: int, data: np.ndarray | bytes) -> int:
+    def zone_append(self, zone_id: int, data: np.ndarray | bytes, *,
+                    timeout: Optional[float] = None) -> int:
         """Striped Zone Append: split ``data`` into stripe chunks and append
         each member's share at that member's write pointer (mirrored on both
         partners under raid1; with a parity chunk per completed stripe row
         under xor). Returns the logical start block. Synchronous shim over
         :meth:`submit_append` — member transfers share one wall-clock window
         (each member's emulated busy time runs on its own zone clock), the
-        call returns at the last member's completion deadline."""
-        return self.submit_append(zone_id, data).result()
+        call returns at the last member's completion deadline. ``timeout``
+        bounds the wait; on expiry the ``TimeoutError`` names the stuck
+        member transfer (a hung command cannot strand the caller)."""
+        return self.submit_append(zone_id, data).result(timeout)
 
     def _append_plan(
         self, zone_id: int, start: int, blocks: np.ndarray
@@ -698,7 +701,7 @@ class StripedZoneArray:
         if reb is not None:
             clauses.append(f"member {reb} rebuilding onto spare")
         if zone_id in self._fenced:
-            clauses.append("fenced by a torn append")
+            clauses.append("fenced by a torn/failed append")
         hint = ""
         if offline or reb is not None:
             hint = (" — correlate with array.member_offline events; appends "
@@ -772,6 +775,8 @@ class StripedZoneArray:
                            default=0.0),
                        ring=ring)
         agg.submitted_block = start
+        agg.device = "array"
+        agg.waits_on = member_futs
         if error is not None:
             if member_futs:
                 # the zone was fenced above: members no longer agree on the
@@ -787,25 +792,55 @@ class StripedZoneArray:
             for i, f in enumerate(member_futs):
                 f.add_done_callback(lambda f, i=i: barrier.settle(i, f.error))
             return agg
-        self._join_members(agg, member_futs, lambda: start)
+        self._join_members(
+            agg, member_futs, lambda: start,
+            on_error=lambda err: self._fence_on_completion(zone_id, err))
         return agg
 
     @staticmethod
     def _join_members(agg: IoFuture, member_futs: list[IoFuture],
-                      finalize: Callable[[], object]) -> None:
+                      finalize: Callable[[], object],
+                      on_error: Optional[Callable[[BaseException], None]] = None
+                      ) -> None:
         """Retire ``agg`` with ``finalize()`` (or the first member error) once
         every member future has retired. Members that completed inline fire
         their callback inline, so a fully-inline fan-out retires ``agg``
-        before this returns (including the zero-member case)."""
-        barrier = CompletionBarrier(
-            len(member_futs),
-            lambda _vals, err: agg.fail(err) if err is not None
-            else agg.complete(finalize()))
+        before this returns (including the zero-member case). ``on_error``
+        runs before the aggregate fails — the append path fences the zone
+        there, since a member completion error (exhausted retry budget, torn
+        append) means the members no longer agree on the stripe stream."""
+
+        def done(_vals, err):
+            if err is not None:
+                if on_error is not None:
+                    on_error(err)
+                agg.fail(err)
+            else:
+                agg.complete(finalize())
+
+        barrier = CompletionBarrier(len(member_futs), done)
         for i, f in enumerate(member_futs):
             f.add_done_callback(lambda f, i=i: barrier.settle(i, f.error))
 
+    def _fence_on_completion(self, zone_id: int, err: BaseException) -> None:
+        """A member append FAILED at completion time (the submit itself was
+        legal): fence the logical zone READ_ONLY — its members may disagree
+        on the stripe stream past the last joined append — and page the
+        operator. Reads still serve; appends refuse until ``reset_zone``.
+        Idempotent per fence epoch."""
+        with self._lock:
+            if zone_id in self._fenced:
+                return
+            self._fenced.add(zone_id)
+        _publish_event(
+            "array.zone_fenced", severity=_Sev.ERROR,
+            message=f"logical zone {zone_id} fenced READ_ONLY after a member "
+                    f"append failed at completion: {err}",
+            zone=zone_id, error=type(err).__name__)
+
     # --------------------------------------------------------------- read
-    def read_blocks(self, zone_id: int, block_off: int, nblocks: int) -> np.ndarray:
+    def read_blocks(self, zone_id: int, block_off: int, nblocks: int, *,
+                    timeout: Optional[float] = None) -> np.ndarray:
         """Striped read, interleaved back into logical order (reconstructing
         any chunk whose member is OFFLINE under raid1/xor).
 
@@ -819,8 +854,10 @@ class StripedZoneArray:
         it last, under this lock). Resetting + rewriting a zone while a read
         of it is in flight is a host protocol bug (same contract as
         ``ZonedDevice.read_blocks_view``, and as real ZNS hardware).
+        ``timeout`` bounds the join; on expiry the ``TimeoutError`` names
+        the member transfer still in flight.
         """
-        out = self.submit_read(zone_id, block_off, nblocks).result()
+        out = self.submit_read(zone_id, block_off, nblocks).result(timeout)
         out = np.asarray(out)
         out = out.view()               # the gather buffer is private: hand the
         out.flags.writeable = True     # sync caller an owned, mutable stream
@@ -916,6 +953,7 @@ class StripedZoneArray:
                 )
             agg = IoFuture(op="read", zone_id=zone_id, block_off=block_off,
                            nblocks=nblocks, ring=ring)
+            agg.device = "array"
             out = np.empty((nblocks, self.block_bytes), np.uint8)
 
             def finalize():
@@ -939,6 +977,7 @@ class StripedZoneArray:
                 lambda _vals, err: agg.fail(err) if err is not None
                 else agg.complete(finalize()))
             submitted: list[tuple[int, object]] = []
+            member_futs: list[IoFuture] = []
             service = 0.0
             for ji, job in enumerate(jobs):
                 try:
@@ -949,8 +988,10 @@ class StripedZoneArray:
                     break
                 submitted.append((ji, job))
                 for f in futs:
+                    member_futs.append(f)
                     service = max(service, f.service_seconds)
             agg.service_seconds = service
+            agg.waits_on = member_futs  # stuck-op diagnosis in result(timeout)
         # attach OUTSIDE the lock: inline completions (the non-emulated fast
         # path) then gather on the submitting thread without holding the
         # array lock; reactor-retired completions route through the gather

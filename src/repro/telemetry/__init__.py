@@ -27,7 +27,7 @@ Consumer side (PR 7):
 from . import alerts, events, health, metrics, trace
 from .alerts import (Alert, AlertEngine, AlertRule, ErrorRateRule,
                      EventPatternRule, HealthPromotionRule,
-                     TenantLatencySLORule)
+                     TenantLatencySLORule, retry_storm_rule)
 from .events import Event, EventLog, Severity, event_log, publish
 from .health import ArrayHealthMonitor, DeviceHealthMonitor, HealthStatus
 from .metrics import (Counter, Gauge, Histogram, MetricsRegistry, StatsView,
@@ -64,6 +64,7 @@ __all__ = [
     "AlertRule",
     "TenantLatencySLORule",
     "ErrorRateRule",
+    "retry_storm_rule",
     "HealthPromotionRule",
     "EventPatternRule",
 ]

@@ -54,6 +54,7 @@ __all__ = [
     "AlertRule",
     "TenantLatencySLORule",
     "ErrorRateRule",
+    "retry_storm_rule",
     "HealthPromotionRule",
     "EventPatternRule",
     "AlertEngine",
@@ -158,6 +159,21 @@ class ErrorRateRule(AlertRule):
                     f"({d / dt:.1f}/s > {self.max_per_second:g}/s)",
                     {"counter": key, "delta": d, "rate_per_s": d / dt})
         return out
+
+
+def retry_storm_rule(*, max_per_second: float = 0.0,
+                     name: str = "retry_storm",
+                     severity: Severity = Severity.WARNING) -> ErrorRateRule:
+    """The default retry-storm pager: fires per member whose absorbed-retry
+    counter (``health.<member>.retries``, surfaced by
+    ``DeviceHealthMonitor.register_on``) grows faster than
+    ``max_per_second`` over the engine window. Retries are the SOFT fault
+    signal — the datapath rode through them — so this pages an operator
+    about a sick-but-serving member BEFORE exhausted budgets land in
+    ``read_errors`` and the member is declared dead."""
+    return ErrorRateRule(pattern="health.*.retries",
+                         max_per_second=max_per_second,
+                         name=name, severity=severity)
 
 
 class HealthPromotionRule(AlertRule):

@@ -72,6 +72,11 @@ class HealthStatus(enum.IntEnum):
 # as a media error for classification, same as an explicit read error
 _ERROR_KEYS = ("read_errors", "append_errors", "scrub_mismatches")
 _OPS_KEYS = ("blocks_read", "blocks_appended")
+# Soft fault signals: retries the datapath ABSORBED and per-op timeouts.
+# They classify a member SUSPECT (a retry storm pages before a hard
+# failure does) but never DEGRADED — only exhausted retry budgets land in
+# read_errors/append_errors and trigger ejection/rebuild.
+_SOFT_KEYS = ("retries", "io_timeouts")
 
 
 class DeviceHealthMonitor:
@@ -119,6 +124,7 @@ class DeviceHealthMonitor:
         # last-window deltas, kept for smart_log / debugging
         self._win_errors = 0
         self._win_ops = 0
+        self._win_soft = 0
 
     # ------------------------------------------------------------ sampling
     def _zone_counts(self) -> tuple[int, int, int]:
@@ -166,6 +172,8 @@ class DeviceHealthMonitor:
                 snap.get(k, 0) - prev.get(k, 0) for k in _ERROR_KEYS)
             self._win_ops = sum(
                 snap.get(k, 0) - prev.get(k, 0) for k in _OPS_KEYS)
+            self._win_soft = sum(
+                snap.get(k, 0) - prev.get(k, 0) for k in _SOFT_KEYS)
             n_zones, off, ro = self._zone_counts()
             status = self._classify(n_zones, off, ro, outlier)
             prev_status, self._status = self._status, status
@@ -199,7 +207,7 @@ class DeviceHealthMonitor:
         recent_outlier = outlier or (
             self._windows - self._last_outlier_window
             < self.suspect_memory_windows)
-        if off or ro or self._win_errors or recent_outlier:
+        if off or ro or self._win_errors or self._win_soft or recent_outlier:
             return HealthStatus.SUSPECT
         return HealthStatus.HEALTHY
 
@@ -227,6 +235,9 @@ class DeviceHealthMonitor:
                 "append_errors": snap.get("append_errors", 0),
                 "scrub_mismatches": snap.get("scrub_mismatches", 0),
                 "media_errors": sum(snap.get(k, 0) for k in _ERROR_KEYS),
+                "retries": snap.get("retries", 0),
+                "io_timeouts": snap.get("io_timeouts", 0),
+                "faults_injected": snap.get("faults_injected", 0),
                 "zone_resets": snap.get("zone_resets", 0),
                 "zone_readonly_transitions":
                     snap.get("zone_readonly_transitions", 0),

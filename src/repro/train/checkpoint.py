@@ -192,6 +192,7 @@ class ZonedCheckpointStore:
                 member_zone_bytes: int = 64 * 1024 * 1024,
                 stripe_blocks: int = 256, keep: int = 2,
                 redundancy: str = "raid0",
+                fault_injector=None, retry_policy=None,
                 ) -> "ZonedCheckpointStore":
         """Checkpoint store over a striped array of file-backed ZNS devices.
 
@@ -211,6 +212,11 @@ class ZonedCheckpointStore:
         stale geometry would de-interleave member blocks in the wrong order
         and render every checkpoint unreadable, so the sidecar, not the
         arguments, is the truth for an existing store.
+
+        ``fault_injector``/``retry_policy`` arm every member device with the
+        fault-injection machinery (keyed by member index, the stable
+        identity fault schedules replay under) — checkpoint saves then ride
+        the same retry/timeout datapath as any other array traffic.
         """
         directory = Path(directory)
         directory.mkdir(parents=True, exist_ok=True)
@@ -229,7 +235,9 @@ class ZonedCheckpointStore:
             ZonedDevice(num_zones=geometry["num_zones"],
                         zone_bytes=geometry["member_zone_bytes"],
                         block_bytes=4096,
-                        backing_file=directory / f"member{i}.zns")
+                        backing_file=directory / f"member{i}.zns",
+                        fault_injector=fault_injector, fault_key=i,
+                        retry_policy=retry_policy)
             for i in range(geometry["num_devices"])
         ]
         array = StripedZoneArray(devices,

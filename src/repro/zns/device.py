@@ -35,10 +35,20 @@ from typing import Optional
 
 import numpy as np
 
+from repro.faults.errors import (IoTimeoutError, TornAppendError,
+                                 TransientIOError)
+from repro.faults.injector import FaultDecision
+from repro.faults.retry import RetryPolicy, drive_retries
 from repro.telemetry import trace as _trace
 from repro.telemetry.events import Severity as _Sev, publish as _publish_event
 from repro.telemetry.metrics import MetricsRegistry, StatsView
 from repro.zns.ring import CompletionRing, IoFuture, IoReactor
+
+# the "no injector attached" decision and the "no policy set" policy: a
+# single attempt, no backoff, no timeout — byte-for-byte the legacy behavior
+_NO_FAULT = FaultDecision()
+_SINGLE_ATTEMPT = RetryPolicy(max_attempts=1, backoff_base_s=0.0,
+                              timeout_s=None)
 
 __all__ = [
     "ZoneState",
@@ -167,6 +177,9 @@ class ZonedDevice:
         append_us_per_block: float = 0.0,
         max_open_zones: int = 0,  # 0 = unlimited (QEMU default)
         reactor: Optional[IoReactor] = None,
+        fault_injector=None,
+        fault_key=None,
+        retry_policy: Optional[RetryPolicy] = None,
     ):
         if zone_bytes % block_bytes != 0:
             raise ValueError("zone_bytes must be a multiple of block_bytes")
@@ -205,6 +218,7 @@ class ZonedDevice:
         # thousands), so each owns a PRIVATE registry rather than polluting
         # the process-global one; ``stats`` keeps the legacy dict shape.
         self.dev_ordinal = next(_DEV_SEQ)
+        self._devname = f"dev{self.dev_ordinal}"
         self.metrics = MetricsRegistry(f"dev{self.dev_ordinal}")
         self._c_blocks_read = self.metrics.counter("blocks_read")
         self._c_blocks_appended = self.metrics.counter("blocks_appended")
@@ -221,6 +235,14 @@ class ZonedDevice:
             "zone_readonly_transitions")
         self._c_zone_off_transitions = self.metrics.counter(
             "zone_offline_transitions")
+        # Transient-fault accounting, deliberately SEPARATE from the hard
+        # read/append error counters: an injected media error that a retry
+        # absorbs is a soft signal (SUSPECT at worst), only an exhausted
+        # retry budget escalates into read_errors/append_errors and the
+        # degraded/rebuild pipeline.
+        self._c_retries = self.metrics.counter("retries")
+        self._c_io_timeouts = self.metrics.counter("io_timeouts")
+        self._c_faults_injected = self.metrics.counter("faults_injected")
         self.stats = StatsView({
             "blocks_read": self._c_blocks_read,
             "blocks_appended": self._c_blocks_appended,
@@ -230,6 +252,9 @@ class ZonedDevice:
             "bytes_viewed": self._c_bytes_viewed,
             "read_errors": self._c_read_errors,
             "append_errors": self._c_append_errors,
+            "retries": self._c_retries,
+            "io_timeouts": self._c_io_timeouts,
+            "faults_injected": self._c_faults_injected,
         })
         # Service/queue-wait distributions for emulated (timed) transfers
         # only — the zero-service fast path stays metric-free.
@@ -237,6 +262,27 @@ class ZonedDevice:
         self._h_read_wait = self.metrics.histogram("read.wait_seconds")
         self._h_append_service = self.metrics.histogram("append.service_seconds")
         self._h_append_wait = self.metrics.histogram("append.wait_seconds")
+        # Fault-injection wiring (see repro.faults): when either knob is set
+        # the submit paths take the retrying/faulty branch; with both unset
+        # every path below is byte-for-byte the legacy fast path.
+        self.fault_injector = fault_injector
+        self.fault_key = fault_key if fault_key is not None else self.dev_ordinal
+        self.retry_policy = retry_policy
+        # append listeners: ``fn(device, zone_id, start_rel, nblocks, fut)``
+        # called at submission, BEFORE the future can retire — the crash
+        # harness journals durable appends by attaching done-callbacks here.
+        self._append_listeners: list = []
+
+    def add_append_listener(self, fn) -> None:
+        """Observe every async append submission: ``fn(device, zone_id,
+        start_rel, nblocks, fut)`` runs after the data effect lands and
+        before the completion can retire, so a listener's done-callback on
+        ``fut`` fires ahead of any caller-attached callback."""
+        self._append_listeners.append(fn)
+
+    @property
+    def _faulty(self) -> bool:
+        return self.fault_injector is not None or self.retry_policy is not None
 
     # ------------------------------------------------------------------ zones
     def zone(self, zone_id: int) -> Zone:
@@ -286,6 +332,42 @@ class ZonedDevice:
             self._c_blocks_appended.inc(nblocks)
             return z, start_rel, nblocks
 
+    def _do_append_torn(self, zone_id: int, data: np.ndarray | bytes,
+                        keep_frac: float) -> tuple[Zone, int, int, int]:
+        """Torn-append data effect: the command claimed ``nblocks`` but only
+        a prefix of ``kept`` blocks reached the media before it failed — the
+        write pointer advances by ``kept`` and the zone is left
+        host-indeterminate, exactly the anomaly the crash/fencing machinery
+        exists to contain. Same protocol checks as :meth:`_do_append` (a
+        torn append is a *media* fault layered on a legal command). Returns
+        ``(zone, start_rel, nblocks, kept)``."""
+        raw = payload_as_uint8(data)
+        nblocks = -(-raw.size // self.block_bytes)  # ceil
+        with self._lock:
+            z = self.zone(zone_id)
+            if z.state == ZoneState.EMPTY:
+                if self.max_open_zones and len(self.open_zones()) >= self.max_open_zones:
+                    self._c_append_errors.inc()
+                    raise ZoneStateError("max open zones exceeded")
+                z.state = ZoneState.OPEN
+            if not z.is_writable:
+                self._c_append_errors.inc()
+                raise ZoneStateError(f"zone {zone_id} not writable (state={z.state})")
+            if nblocks > z.remaining_blocks:
+                self._c_append_errors.inc()
+                raise ZoneFullError(
+                    f"append of {nblocks} blocks exceeds zone {zone_id} "
+                    f"remaining {z.remaining_blocks}"
+                )
+            kept = min(nblocks - 1, max(1, int(round(nblocks * keep_frac))))
+            start_rel = z.write_pointer
+            off = (z.start_lba + start_rel) * self.block_bytes
+            nbytes = min(raw.size, kept * self.block_bytes)
+            self._buf[off : off + nbytes] = raw[:nbytes]
+            z.write_pointer += kept
+            self._c_blocks_appended.inc(kept)
+            return z, start_rel, nblocks, kept
+
     def zone_append(self, zone_id: int, data: np.ndarray | bytes) -> int:
         """ZNS 'Zone Append': write ``data`` at the zone's write pointer.
 
@@ -295,6 +377,10 @@ class ZonedDevice:
         blocks for the emulated transfer time; the async path is
         :meth:`submit_append`.
         """
+        if self._faulty:
+            # the sync shim over the faulty async path: same injector
+            # consultation, same retry/timeout behavior as submit_append
+            return self.submit_append(zone_id, data).result()
         with self._lock:
             z, start_rel, nblocks = self._do_append(zone_id, data)
             deadline, service = self._claim_slot(
@@ -311,21 +397,225 @@ class ZonedDevice:
         the completion entry. ``fut.submitted_block`` exposes the landing
         block synchronously for emulation-internal consumers (stripe desync
         checks)."""
+        if self._faulty:
+            return self._submit_append_faulty(zone_id, data, ring=ring)
         with self._lock:
             z, start_rel, nblocks = self._do_append(zone_id, data)
             fut = IoFuture(op="append", zone_id=zone_id, block_off=start_rel,
                            nblocks=nblocks, ring=ring)
             fut.submitted_block = start_rel
             fut._value = start_rel
+            fut.device = self._devname
             deadline, service = self._claim_slot(
                 z, nblocks, self.append_us_per_block, fut, op="append")
             fut.service_seconds = service
+        for fn in self._append_listeners:
+            fn(self, zone_id, start_rel, nblocks, fut)
         return self.reactor.schedule(fut, deadline)
+
+    # ------------------------------------------------- fault-injected paths
+    def _fault_hooks(self, op: str, zone_id: int, err_counter):
+        """Build the retry controller's ``on_*`` hooks for one logical op:
+        soft-counter increments plus ``io.*`` events tagged with the
+        device's stable fault key (``member``), published outside any lock
+        (the hooks run as completion/timer callbacks)."""
+        dev = self._devname
+        member = self.fault_key
+
+        def on_retry(attempt, err):
+            self._c_retries.inc()
+            _publish_event(
+                "io.retry", severity=_Sev.WARNING,
+                message=f"{dev} {op} zone {zone_id} attempt {attempt} "
+                        f"failed ({type(err).__name__}); retrying",
+                device=dev, member=member, zone=zone_id, op=op,
+                attempt=attempt, error=type(err).__name__)
+
+        def on_timeout(attempt, err):
+            self._c_io_timeouts.inc()
+            _publish_event(
+                "io.timeout", severity=_Sev.ERROR,
+                message=f"{dev} {op} zone {zone_id} attempt {attempt} "
+                        f"exceeded its timeout budget",
+                device=dev, member=member, zone=zone_id, op=op,
+                attempt=attempt)
+
+        def on_exhausted(attempt, err):
+            err_counter.inc()
+            _publish_event(
+                "io.retry_exhausted", severity=_Sev.ERROR,
+                message=f"{dev} {op} zone {zone_id} gave up after "
+                        f"{attempt} attempt(s): {type(err).__name__}",
+                device=dev, member=member, zone=zone_id, op=op,
+                attempt=attempt, error=type(err).__name__)
+
+        def timeout_error(attempt):
+            return IoTimeoutError(
+                f"{op} on {dev} zone {zone_id} attempt {attempt} exceeded "
+                f"its timeout budget", op=op, device=dev, zone_id=zone_id,
+                attempt=attempt)
+
+        return on_retry, on_timeout, on_exhausted, timeout_error
+
+    def _submit_read_faulty(self, zone_id: int, block_off: int, nblocks: int,
+                            *, dtype=None, copy: bool = False,
+                            ring: Optional[CompletionRing] = None) -> IoFuture:
+        """submit_read with the injector/retry machinery engaged: every
+        attempt re-snapshots the span, consults the injector, and stages a
+        value OR an error completion on its attempt future; the caller sees
+        one aggregate future the retry controller resolves."""
+        inj = self.fault_injector
+        policy = self.retry_policy or _SINGLE_ATTEMPT
+        dev = self._devname
+        key = self.fault_key
+        agg = IoFuture(op="read", zone_id=zone_id, block_off=block_off,
+                       nblocks=nblocks, ring=ring)
+        agg.device = dev
+
+        def submit_attempt(attempt: int) -> Optional[IoFuture]:
+            with self._lock:
+                z, span = self._read_span(zone_id, block_off, nblocks,
+                                          copy=copy)
+                if dtype is not None:
+                    span = span.view(dtype)
+                d = inj.decide(key, "read", zone_id, nblocks,
+                               retry=attempt > 1) if inj else _NO_FAULT
+                if d.kind is not None or d.extra_latency_s:
+                    self._c_faults_injected.inc()
+                if d.kind == "hang":
+                    return None       # completion lost; only a timeout helps
+                fut = IoFuture(op="read", zone_id=zone_id,
+                               block_off=block_off, nblocks=nblocks)
+                fut.device = dev
+                if d.kind is not None:
+                    fut._error = TransientIOError(
+                        f"injected media error: read {dev} zone {zone_id} "
+                        f"attempt {attempt}", op="read", device=dev,
+                        zone_id=zone_id, attempt=attempt)
+                else:
+                    fut._value = span
+                deadline, service = self._claim_slot(
+                    z, nblocks, self.read_us_per_block, fut,
+                    extra_s=d.extra_latency_s)
+                fut.service_seconds = service
+            return self.reactor.schedule(fut, deadline)
+
+        on_retry, on_timeout, on_exhausted, timeout_error = \
+            self._fault_hooks("read", zone_id, self._c_read_errors)
+        jitter = (lambda: inj.jitter01(key, "read")) if inj \
+            else (lambda: 0.5)
+        first = (submit_attempt(1),)  # protocol errors raise synchronously,
+        return drive_retries(         # exactly like the fault-free path
+            agg, policy=policy, reactor=self.reactor, submit=submit_attempt,
+            jitter01=jitter, on_retry=on_retry, on_timeout=on_timeout,
+            on_exhausted=on_exhausted, timeout_error=timeout_error,
+            first=first)
+
+    def _submit_append_faulty(self, zone_id: int, data, *,
+                              ring: Optional[CompletionRing] = None) -> IoFuture:
+        """submit_append with the injector/retry machinery engaged.
+
+        The data effect happens exactly ONCE, at the first submission, under
+        the device lock — an injected media error is a *completion status*
+        (the payload landed; the device reported failure), so a retry only
+        replays the completion for the same landing block. A torn append
+        lands a prefix and fails with the non-retryable
+        :class:`TornAppendError`; a hung append lands its payload but its
+        completion never arrives."""
+        inj = self.fault_injector
+        policy = self.retry_policy or _SINGLE_ATTEMPT
+        dev = self._devname
+        key = self.fault_key
+        raw = payload_as_uint8(data)
+        est = -(-raw.size // self.block_bytes)  # ceil
+
+        with self._lock:
+            d = inj.decide(key, "append", zone_id, est) if inj else _NO_FAULT
+            if d.kind is not None or d.extra_latency_s:
+                self._c_faults_injected.inc()
+            deadline = 0.0
+            if d.kind == "torn":
+                z, start_rel, nblocks, kept = self._do_append_torn(
+                    zone_id, raw, d.torn_keep)
+                first_fut = IoFuture(op="append", zone_id=zone_id,
+                                     block_off=start_rel, nblocks=nblocks)
+                first_fut.device = dev
+                first_fut._error = TornAppendError(
+                    f"injected torn append: {dev} zone {zone_id} landed "
+                    f"{kept}/{nblocks} blocks", op="append", device=dev,
+                    zone_id=zone_id)
+                deadline, service = self._claim_slot(
+                    z, kept, self.append_us_per_block, first_fut,
+                    op="append", extra_s=d.extra_latency_s)
+                first_fut.service_seconds = service
+            else:
+                z, start_rel, nblocks = self._do_append(zone_id, raw)
+                if d.kind == "hang":
+                    first_fut = None   # payload durable; completion lost
+                else:
+                    first_fut = IoFuture(op="append", zone_id=zone_id,
+                                         block_off=start_rel, nblocks=nblocks)
+                    first_fut.device = dev
+                    if d.kind is not None:
+                        first_fut._error = TransientIOError(
+                            f"injected media error: append {dev} zone "
+                            f"{zone_id} attempt 1", op="append", device=dev,
+                            zone_id=zone_id, attempt=1)
+                    else:
+                        first_fut._value = start_rel
+                    deadline, service = self._claim_slot(
+                        z, nblocks, self.append_us_per_block, first_fut,
+                        op="append", extra_s=d.extra_latency_s)
+                    first_fut.service_seconds = service
+            agg = IoFuture(op="append", zone_id=zone_id, block_off=start_rel,
+                           nblocks=nblocks, ring=ring)
+            agg.device = dev
+            agg.submitted_block = start_rel
+        for fn in self._append_listeners:
+            fn(self, zone_id, start_rel, nblocks, agg)
+        if first_fut is not None:
+            self.reactor.schedule(first_fut, deadline)
+
+        def submit_attempt(attempt: int) -> Optional[IoFuture]:
+            # the payload is already durable at start_rel (the ZNS append
+            # data effect is once-only); a retry replays the completion
+            d = inj.decide(key, "append", zone_id, nblocks,
+                           retry=True) if inj else _NO_FAULT
+            if d.kind is not None or d.extra_latency_s:
+                self._c_faults_injected.inc()
+            if d.kind == "hang":
+                return None
+            z = self.zone(zone_id)
+            fut = IoFuture(op="append", zone_id=zone_id, block_off=start_rel,
+                           nblocks=nblocks)
+            fut.device = dev
+            if d.kind is not None:
+                fut._error = TransientIOError(
+                    f"injected media error: append {dev} zone {zone_id} "
+                    f"attempt {attempt}", op="append", device=dev,
+                    zone_id=zone_id, attempt=attempt)
+            else:
+                fut._value = start_rel
+            deadline, service = self._claim_slot(
+                z, nblocks, self.append_us_per_block, fut, op="append",
+                extra_s=d.extra_latency_s)
+            fut.service_seconds = service
+            return self.reactor.schedule(fut, deadline)
+
+        on_retry, on_timeout, on_exhausted, timeout_error = \
+            self._fault_hooks("append", zone_id, self._c_append_errors)
+        jitter = (lambda: inj.jitter01(key, "append")) if inj \
+            else (lambda: 0.5)
+        return drive_retries(
+            agg, policy=policy, reactor=self.reactor, submit=submit_attempt,
+            jitter01=jitter, on_retry=on_retry, on_timeout=on_timeout,
+            on_exhausted=on_exhausted, timeout_error=timeout_error,
+            first=(first_fut,))
 
     # ------------------------------------------------------------------- read
     def _claim_slot(self, z: Zone, nblocks: int, us_per_block: float,
                     fut: Optional[IoFuture] = None,
-                    op: str = "read") -> tuple[float, float]:
+                    op: str = "read", extra_s: float = 0.0) -> tuple[float, float]:
         """Reserve this transfer's slot in the zone's virtual-time queue.
 
         Returns ``(completion_deadline, service_seconds)``. Same-zone
@@ -341,8 +631,10 @@ class ZonedDevice:
         section that landed the data / snapshotted the read span), so a
         zone's virtual-time order can never invert against its data order —
         two racing appends complete in the order their bytes landed.
+        ``extra_s`` adds an injected latency spike to the service time (it
+        occupies the zone's die like real slow media would).
         """
-        service = nblocks * us_per_block * 1e-6
+        service = nblocks * us_per_block * 1e-6 + extra_s
         if not service and not z.io_busy_until:
             return 0.0, 0.0            # non-emulated fast path: no lock
         now = time.monotonic()
@@ -420,6 +712,9 @@ class ZonedDevice:
         zone mid-read); the offload hot path uses :meth:`read_blocks_view` /
         :meth:`read_extent` instead.
         """
+        if self._faulty:
+            return self.submit_read(zone_id, block_off, nblocks,
+                                    copy=True).result()
         with self._lock:
             z, out = self._read_span(zone_id, block_off, nblocks, copy=True)
             deadline, service = self._claim_slot(
@@ -439,6 +734,9 @@ class ZonedDevice:
         the device-internal DMA the paper models, with at most the one copy
         XLA itself makes on device_put.
         """
+        if self._faulty:
+            return self.submit_read(zone_id, block_off, nblocks,
+                                    copy=False).result()
         with self._lock:
             z, view = self._read_span(zone_id, block_off, nblocks, copy=False)
             deadline, service = self._claim_slot(
@@ -464,6 +762,9 @@ class ZonedDevice:
         """
         if dtype is not None:
             dtype = block_aligned_dtype(self.block_bytes, dtype)
+        if self._faulty:
+            return self._submit_read_faulty(zone_id, block_off, nblocks,
+                                            dtype=dtype, copy=copy, ring=ring)
         with self._lock:
             z, span = self._read_span(zone_id, block_off, nblocks, copy=copy)
             if dtype is not None:
@@ -471,6 +772,7 @@ class ZonedDevice:
             fut = IoFuture(op="read", zone_id=zone_id, block_off=block_off,
                            nblocks=nblocks, ring=ring)
             fut._value = span
+            fut.device = self._devname
             deadline, service = self._claim_slot(
                 z, nblocks, self.read_us_per_block, fut)
             fut.service_seconds = service

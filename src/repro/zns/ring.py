@@ -74,9 +74,9 @@ class IoFuture:
     """
 
     __slots__ = ("op", "zone_id", "block_off", "nblocks", "service_seconds",
-                 "deadline", "seq", "submitted_block", "ring", "_prev",
-                 "_value", "_error", "_done", "_event", "_callbacks",
-                 "__weakref__")
+                 "deadline", "seq", "submitted_block", "ring", "device",
+                 "tenant", "waits_on", "_prev", "_value", "_error", "_done",
+                 "_event", "_callbacks", "__weakref__")
 
     def __init__(self, op: str = "io", zone_id: int = -1, block_off: int = 0,
                  nblocks: int = 0, service_seconds: float = 0.0,
@@ -90,6 +90,11 @@ class IoFuture:
         self.seq = next(_seq)
         self.submitted_block: Optional[int] = None
         self.ring = ring
+        # stuck-op diagnostics: who owns this transfer and what it fans out
+        # to — ``result(timeout=)`` names them instead of timing out mutely
+        self.device: str = ""
+        self.tenant: Optional[str] = None
+        self.waits_on: Optional[list] = None   # member futures of a fan-out
         # the zone's previous timed transfer (completion-order chain): an
         # already-due future may only retire inline if its predecessor has
         # retired — otherwise it parks in the reactor heap, whose
@@ -116,17 +121,32 @@ class IoFuture:
     def error(self) -> Optional[BaseException]:
         return self._error
 
+    def stuck_detail(self) -> str:
+        """One-line diagnosis of an overdue transfer: op, device, zone,
+        owning tenant, and — for a fan-out aggregate — the first member
+        transfer still holding it up (a hung command names itself)."""
+        where = f" on {self.device}" if self.device else ""
+        who = f" for tenant {self.tenant!r}" if self.tenant else ""
+        msg = f"{self.op}{where} zone {self.zone_id}{who} still in flight"
+        for m in (self.waits_on or ()):
+            if not m.done():
+                msg += (f" (waiting on {m.op} {m.device or '?'} "
+                        f"zone {m.zone_id} seq #{m.seq})")
+                break
+        return msg
+
     def result(self, timeout: Optional[float] = None):
         """Block until the emulated completion deadline; return the value or
-        re-raise the transfer's error."""
+        re-raise the transfer's error. ``timeout`` bounds the wait in wall
+        seconds — on expiry a ``TimeoutError`` names the stuck op
+        (device/zone/op/tenant) instead of hanging the caller forever."""
         if not self._done:
             with _TRANSITION_LOCK:
                 if not self._done and self._event is None:
                     self._event = threading.Event()
                 ev = self._event
             if ev is not None and not ev.wait(timeout):
-                raise TimeoutError(
-                    f"{self.op} on zone {self.zone_id} still in flight")
+                raise TimeoutError(self.stuck_detail())
         if self._error is not None:
             raise self._error
         return self._value
