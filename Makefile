@@ -42,7 +42,11 @@ smoke:
 # read-error rates leave offload results bit-identical with bounded p99 and
 # nobody ejected, the retry-storm rule pages, and the power-loss crash
 # sweep recovers a committed checkpoint (or refuses cleanly) at every
-# member append-completion boundary.
+# member append-completion boundary. The array suite is the scaling-cliff
+# tripwire: bench_array ASSERTS monotonic 1->8-device offload throughput
+# and near-linear 1->4 (so a change that re-serializes host work behind
+# the staged read -> batched-compute -> combine pipeline fails bench-smoke,
+# it does not just drift a JSON number).
 bench-smoke:
 	python benchmarks/run.py --only filter,array,async,degraded,profile,health,rebuild,faults --budget 120
 

@@ -11,6 +11,16 @@ Reported per width: steady-state offload microseconds, aggregate throughput
 in MiB/s of zone data scanned, and the speedup vs the 1-device array (the
 degenerate ``NvmCsd`` path). The paper's thesis at fleet scale: bytes moved
 to the host stay constant (8 per offload) while scan throughput multiplies.
+
+Scaling is ASSERTED, not just reported (the ROADMAP acceptance bar): the
+staged read -> batched-compute -> combine pipeline must deliver monotonic
+throughput 1 -> 8 devices and near-linear 1 -> 4. Member bandwidth is
+emulated at 16 us per 4 KiB block (~256 MB/s, a QEMU-emulated-ZNS-class
+member as the paper uses), so the benchmark sits in the device-bound regime
+where fan-out HAS to pay off — a scheduler that serializes host work behind
+the reads re-introduces the cliff and trips the assert. Timing is
+best-of-N: a background load spike on the host can double any single run's
+wall clock, and the pipeline's steady state is the minimum, not the mean.
 """
 from __future__ import annotations
 
@@ -30,12 +40,12 @@ def run_scaling(
     widths: tuple[int, ...] = (1, 2, 4, 8),
     data_mib: int = 16,
     stripe_blocks: int = 64,
-    read_us_per_block: float = 2.0,
-    runs: int = 3,
+    read_us_per_block: float = 16.0,
+    runs: int = 5,
     seed: int = 0,
 ) -> list[dict]:
     """Same logical data on arrays of increasing width; offload throughput
-    must rise monotonically with the member count."""
+    must rise monotonically with the member count — asserted below."""
     data_bytes = data_mib * 1024 * 1024
     rng = np.random.default_rng(seed)
     data = rng.integers(0, RAND_MAX, data_bytes // 4, dtype=np.int32)
@@ -61,7 +71,7 @@ def run_scaling(
                     stats = sched.nvm_cmd_bpf_run(program, 0)
                     times.append(time.perf_counter() - t)
                 assert int(sched.nvm_cmd_bpf_result()) == expected
-        seconds = float(np.mean(times))
+        seconds = float(min(times))
         out.append({
             "devices": n,
             "seconds": seconds,
@@ -71,12 +81,32 @@ def run_scaling(
             "batched": stats.batched_chunks,
             "bytes_to_host": stats.bytes_returned,
         })
+
+    # The scaling-cliff tripwire (ROADMAP acceptance bar; also run by
+    # `make bench-smoke`): the fan-out pipeline must never get SLOWER as
+    # members are added, and 1 -> 4 must stay near-linear. 0.97 absorbs
+    # timer jitter between adjacent widths, nothing more — the measured
+    # margins are 40-80%.
+    thr = {r["devices"]: r["mib_per_s"] for r in out}
+    for lo, hi in zip(widths, widths[1:]):
+        assert thr[hi] >= 0.97 * thr[lo], (
+            f"scaling cliff is back: {hi}-device throughput "
+            f"{thr[hi]:.0f} MiB/s < {lo}-device {thr[lo]:.0f} MiB/s")
+    if 1 in thr and 4 in thr:
+        assert thr[4] >= 2.5 * thr[1], (
+            f"1->4 device scaling fell off near-linear: {thr[4]:.0f} vs "
+            f"{thr[1]:.0f} MiB/s ({thr[4] / thr[1]:.2f}x, need >= 2.5x)")
+    if 1 in thr and 8 in thr:
+        assert thr[8] >= 2.0 * thr[1], (
+            f"8-device throughput {thr[8]:.0f} MiB/s is not >= 2x the "
+            f"single device's {thr[1]:.0f} MiB/s")
     return out
 
 
 def main(data_mib: int = 16, runs: int = 3) -> list[str]:
     rows = []
-    results = run_scaling(data_mib=data_mib, runs=runs)
+    # scaling asserts want best-of-N stability even on the quick suite
+    results = run_scaling(data_mib=data_mib, runs=max(runs, 5))
     base = results[0]["seconds"]
     for r in results:
         rows.append(

@@ -1,21 +1,29 @@
-"""Traced array fan-out profile: name the scaling cliff, don't guess at it.
+"""Traced array fan-out profile: name the serialization point, don't guess.
 
-The array benchmark reports THAT aggregate throughput stops scaling past 2
-devices (ROADMAP: 675 -> 1153 -> 979 -> 760 MiB/s at 1/2/4/8); this one runs
-the same offload fan-out with tracing ON and attributes the offload wall
-clock to named components so the flat spot has a culprit:
+The original thread-per-member fan-out stopped scaling past 2 devices
+(675 -> 1153 -> 979 -> 760 MiB/s at 1/2/4/8) and this profile named the
+culprit: ``worker.compute`` — N GIL-contending per-worker JAX dispatches —
+blew up ~60x on the straggler's critical path. The ISSUE-10 pipeline
+(read stage -> ONE array-wide batched dispatch -> gather-pool combine)
+removed that axis entirely, and this profile now attributes the staged
+offload wall clock so any NEW serialization point gets a name:
 
   * per width, every ``offload.execute`` span is decomposed into its
-    sequential phases (plan / fanout / combine — asserted to cover >= 90%
-    of the measured wall, so the attribution is honest, not vibes);
-  * inside the fanout, the STRAGGLER device worker defines the critical
-    path; its ``worker.read_wait`` (emulated device time) vs
-    ``worker.stage`` / ``worker.compute`` (host, GIL-serialized) split is
-    the scaling diagnosis — read_wait shrinks ~1/N with width, host compute
-    does not;
+    sequential dispatcher phases (``offload.plan`` / ``offload.stage.read``
+    / ``offload.stage.compute`` / ``offload.stage.combine`` — asserted to
+    cover >= 90% of the measured wall, so the attribution is honest, not
+    vibes);
+  * inside the compute phase, the dispatcher-side children split the story:
+    ``stage.read_wait`` (blocked on ring completions + staging memcpys —
+    the number that grows if the pipeline serializes on I/O),
+    ``stage.dispatch`` (the single batched compiled call per group) and
+    ``stage.serve_chunk`` (individually re-served tail/degraded chunks);
+    ``offload.stage.combine`` is the rendezvous with the gather-pool
+    combiner, which absorbs the trailing group's XLA materialization;
   * the dominant serialization point is the largest critical-path component
     that FAILED to shrink with width (seconds at max width >= half its
-    1-device seconds) — reported by name in the diagnosis row;
+    1-device seconds) — reported by name in the diagnosis row, which the
+    refactor must keep AWAY from the old per-worker-compute shape;
   * a tracing-overhead tripwire measures the DISABLED-path primitive costs
     (no-op span, counter inc, histogram observe, enabled check) and asserts
     the per-offload instrumentation budget stays under 3% of a measured
@@ -43,10 +51,12 @@ MIN_ATTRIBUTION = 0.90
 MAX_DISABLED_OVERHEAD = 0.03
 
 # critical-path components that can be "the serialization point" (everything
-# host-serial plus the device wait itself — if read_wait still dominates at
-# max width the reads are NOT overlapping and that IS the finding)
-_CP_COMPONENTS = ("worker.read_wait", "worker.stage", "worker.compute",
-                  "offload.plan", "offload.combine", "fanout.join")
+# dispatcher-serial plus the staged read wait itself — if stage.read_wait
+# still dominates at max width the reads are NOT overlapping and that IS
+# the finding)
+_CP_COMPONENTS = ("stage.read_wait", "stage.dispatch", "stage.serve_chunk",
+                  "offload.plan", "offload.stage.read",
+                  "offload.stage.combine")
 
 
 def _spans(events: list[dict], name: str) -> list[dict]:
@@ -69,39 +79,38 @@ def _children(events: list[dict], parent: dict, name: str,
 def _critical_path(events: list[dict], execute: dict) -> dict:
     """Decompose ONE offload.execute span into named critical-path seconds.
 
-    plan/fanout/combine are sequential phases of the dispatcher thread; the
-    straggler ``worker.device`` span bounds the fanout's critical path, and
-    its read_wait/stage/compute children split it. The residuals get their
-    own names (worker.other, fanout.join, execute.other) so every second of
-    the wall is accounted somewhere."""
+    plan / stage.read / stage.compute / stage.combine are the sequential
+    phases of the ONE dispatcher thread (the pipeline has no per-member
+    workers to straggle); inside the compute phase its read_wait / staging
+    / dispatch / serve_chunk children split the time. The residuals get
+    their own names (compute.other, execute.other) so every second of the
+    wall is accounted somewhere."""
     cp = {c: 0.0 for c in _CP_COMPONENTS}
-    cp.update({"worker.other": 0.0, "execute.other": 0.0})
+    cp.update({"stage.staging": 0.0, "compute.other": 0.0,
+               "execute.other": 0.0})
     plan = sum(e["dur"] for e in _children(events, execute, "offload.plan"))
-    combine = sum(e["dur"]
-                  for e in _children(events, execute, "offload.combine"))
-    fanouts = _children(events, execute, "offload.fanout")
-    fanout = sum(e["dur"] for e in fanouts)
+    read = sum(e["dur"]
+               for e in _children(events, execute, "offload.stage.read"))
+    combine = sum(e["dur"] for e in
+                  _children(events, execute, "offload.stage.combine"))
+    computes = _children(events, execute, "offload.stage.compute")
+    compute = sum(e["dur"] for e in computes)
     cp["offload.plan"] = plan
-    cp["offload.combine"] = combine
-    straggler_total = 0.0
-    for f in fanouts:
-        workers = _children(events, f, "worker.device")
-        if not workers:
-            continue
-        straggler = max(workers, key=lambda e: e["dur"])
-        straggler_total += straggler["dur"]
-        for comp, nm in (("worker.read_wait", "worker.read_wait"),
-                         ("worker.stage", "worker.stage"),
-                         ("worker.compute", "worker.compute")):
-            cp[comp] += sum(e["dur"] for e in
-                            _children(events, straggler, nm, same_tid=True))
-    cp["worker.other"] = max(
-        straggler_total - cp["worker.read_wait"] - cp["worker.stage"]
-        - cp["worker.compute"], 0.0)
-    cp["fanout.join"] = max(fanout - straggler_total, 0.0)
-    cp["execute.other"] = max(execute["dur"] - plan - fanout - combine, 0.0)
-    cp["_phase_coverage"] = (plan + fanout + combine) / execute["dur"] \
-        if execute["dur"] > 0 else 1.0
+    cp["offload.stage.read"] = read
+    cp["offload.stage.combine"] = combine
+    inner = 0.0
+    for ph in computes:
+        for nm in ("stage.read_wait", "stage.staging", "stage.dispatch",
+                   "stage.serve_chunk"):
+            s = sum(e["dur"] for e in
+                    _children(events, ph, nm, same_tid=True))
+            cp[nm] += s
+            inner += s
+    cp["compute.other"] = max(compute - inner, 0.0)
+    cp["execute.other"] = max(
+        execute["dur"] - plan - read - compute - combine, 0.0)
+    cp["_phase_coverage"] = (plan + read + compute + combine) \
+        / execute["dur"] if execute["dur"] > 0 else 1.0
     return cp
 
 
@@ -110,7 +119,7 @@ def run_profile(
     widths: tuple[int, ...] = (1, 2, 4, 8),
     data_mib: int = 16,
     stripe_blocks: int = 64,
-    read_us_per_block: float = 2.0,
+    read_us_per_block: float = 16.0,
     runs: int = 3,
     seed: int = 0,
 ) -> list[dict]:
@@ -280,11 +289,12 @@ def main(data_mib: int = 16, runs: int = 3) -> list[str]:
         rows.append(
             f"profile_{r['devices']}dev,{r['seconds'] * 1e6:.0f},"
             f"mib_per_s={r['mib_per_s']:.1f};attributed={r['attributed']:.2f};"
-            f"read_wait_ms={cp.get('worker.read_wait', 0) * 1e3:.1f};"
-            f"stage_ms={cp.get('worker.stage', 0) * 1e3:.1f};"
-            f"compute_ms={cp.get('worker.compute', 0) * 1e3:.1f};"
-            f"join_ms={cp.get('fanout.join', 0) * 1e3:.1f};"
-            f"combine_ms={cp.get('offload.combine', 0) * 1e3:.1f};"
+            f"read_wait_ms={cp.get('stage.read_wait', 0) * 1e3:.1f};"
+            f"staging_ms={cp.get('stage.staging', 0) * 1e3:.1f};"
+            f"dispatch_ms={cp.get('stage.dispatch', 0) * 1e3:.1f};"
+            f"serve_ms={cp.get('stage.serve_chunk', 0) * 1e3:.1f};"
+            f"submit_ms={cp.get('offload.stage.read', 0) * 1e3:.1f};"
+            f"combine_ms={cp.get('offload.stage.combine', 0) * 1e3:.1f};"
             f"plan_ms={cp.get('offload.plan', 0) * 1e3:.1f};"
             f"events={r['trace_events']};dropped={r['trace_dropped']}"
         )

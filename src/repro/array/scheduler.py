@@ -10,19 +10,24 @@ The :class:`OffloadScheduler` scales that contract to a
   2. **queue + arbitrate** — commands sit in per-tenant NVMe-style SQs with
      depth limits and are dispatched by weighted round-robin (see
      :mod:`repro.array.queues`);
-  3. **fan out** — the logical extent decomposes into stripe chunks, each
-     contiguous on exactly one member device; every device executes its
-     chunks concurrently on the existing interp/jit/kernel tiers. Same-shape
-     chunks are batched into ONE compiled call per device group: a vmapped
-     XLA call on the JIT tier (:func:`repro.core.vm.jit_program_batched`) or
-     a grid-batched Pallas call on the kernel tier
-     (:func:`repro.kernels.zone_filter.ops.kernel_program_batched`), with
-     every group's device read submitted to the completion ring up front so
-     later groups' emulated transfers elapse while earlier groups execute
-     (:mod:`repro.zns.ring`);
-  4. **scatter-gather** — per-chunk results are re-combined in logical
-     stripe order by a program-aware combiner: SUM/COUNT re-add (float SUM
-     via Kahan compensated f64 accumulation, so results are identical for
+  3. **staged fan-out** — execution is an explicit three-stage pipeline
+     rather than a thread per member. The READ stage submits every member
+     transfer the plan needs to the completion ring UP FRONT — coalesced
+     chunk-group reads per member (:func:`repro.array.striping.
+     coalesce_member_runs`), tail-chunk reads, xor survivor reconstructions
+     — so in-flight depth is bounded by the emulated devices, not a thread
+     pool (:mod:`repro.zns.ring`). The COMPUTE stage is ONE dispatcher that
+     consumes staged groups in logical order and issues ONE array-wide
+     batched compiled call per group over the chunks of ALL members: a
+     vmapped XLA call on the JIT tier
+     (:func:`repro.core.vm.jit_program_batched`) or a grid-batched Pallas
+     call on the kernel tier
+     (:func:`repro.kernels.zone_filter.ops.kernel_program_batched`) —
+     never N GIL-contending per-worker dispatches;
+  4. **combine stage** — per-chunk results fold in logical stripe order on
+     the striping gather pool AS THEY LAND, off the straggler's critical
+     path, by a program-aware combiner: SUM/COUNT re-add (float SUM via
+     Kahan compensated f64 accumulation, so results are identical for
      every array width over the same logical data), MIN/MAX re-reduce, HIST
      re-accumulates, SELECT/SELECT_REC concatenate the first ``capacity``
      matches in logical order — bit-identical to the single-device result
@@ -37,7 +42,6 @@ A 1-device array degrades to the ``NvmCsd`` semantics — the degenerate path.
 """
 from __future__ import annotations
 
-import concurrent.futures
 import threading
 import time
 from dataclasses import dataclass, field
@@ -66,7 +70,13 @@ from repro.array.queues import (
     SubmissionQueue,
     WeightedRoundRobinArbiter,
 )
-from repro.array.striping import StripeChunk, StripedZoneArray
+from repro.array.striping import (
+    StripeChunk,
+    StripedZoneArray,
+    _gather_executor,
+    _off_reactor,
+    coalesce_member_runs,
+)
 from repro.faults.errors import TransientIOError
 from repro.zns.device import ZNSError, block_aligned_dtype
 
@@ -80,25 +90,31 @@ class ArrayOffloadError(Exception):
 
 @dataclass
 class ArrayOffloadStats(OffloadStats):
-    """Per-command statistics aggregated over the whole array fan-out.
+    """Per-command statistics aggregated over the staged fan-out pipeline.
 
-    ``read_seconds`` sums time spent inside member-device transfers across
-    all worker threads; because group reads prefetch under execution, it may
-    exceed the ``exec_seconds`` wall time — that surplus IS the overlap.
+    ``read_seconds`` sums emulated transfer time across every member read;
+    all of those transfers are in flight on the completion ring up front, so
+    it may far exceed the ``exec_seconds`` wall time — the surplus IS the
+    overlap. The per-stage figures (``read_wait_seconds`` /
+    ``stage_seconds`` / ``compute_seconds`` / ``combine_seconds``) decompose
+    where the dispatcher's wall time actually went.
     """
 
     n_devices: int = 1
     n_chunks: int = 1
     batched_chunks: int = 0        # chunks executed via a batched compiled call
+    n_dispatches: int = 0          # array-wide batched compiled calls issued
     # chunks served without their preferred member: raid1 mirror redirects
     # plus xor reconstructions (degraded offloads stay bit-identical; this
     # counter is how an operator notices the array is running degraded)
     degraded_reads: int = 0
     compute_seconds: float = 0.0   # time inside compiled/interp execution only
-    # sum over device workers of max(read + compute - worker wall, 0): the
-    # transfer time each worker hid WITHIN its own device via the prefetcher.
-    # Measured per worker so cross-device parallelism cannot inflate it —
-    # with prefetch disabled this is ~0 even on a wide array.
+    read_wait_seconds: float = 0.0 # wall the compute stage BLOCKED on reads
+    stage_seconds: float = 0.0     # staging memcpys into the batch buffer
+    combine_seconds: float = 0.0   # combiner folds (run on the gather pool)
+    # max(read_seconds - read_wait_seconds, 0): member transfer time the
+    # pipeline hid — under compute, and under other members' transfers
+    # elapsing concurrently on the ring
     overlap_seconds: float = 0.0
     # which tenant's SQ carried the command, plus that tenant's cumulative
     # accounting (bytes/ops/p50/p99/degraded_reads from the global registry)
@@ -108,43 +124,228 @@ class ArrayOffloadStats(OffloadStats):
 
     @property
     def fanout(self) -> str:
-        return f"{self.n_chunks} chunks / {self.n_devices} devices"
+        return (f"{self.n_chunks} chunks / {self.n_devices} devices / "
+                f"{self.n_dispatches} dispatches")
 
     @property
     def overlap_ratio(self) -> float:
-        """Fraction of device-transfer time hidden under that same device's
-        execution (1.0 = reads fully prefetched under compute)."""
+        """Fraction of member-transfer time the pipeline hid (1.0 = the
+        compute stage never blocked on the ring)."""
         return min(self.overlap_seconds / self.read_seconds, 1.0) \
             if self.read_seconds > 0 else 0.0
 
 
 @dataclass
-class _DeviceRun:
-    """Accumulator for one device worker's share of a fan-out (also used to
-    merge the per-device shares into the command totals)."""
+class _StageAgg:
+    """Accumulator for one command's pipeline counters, filled by the
+    compute stage (per-chunk serving paths park values in ``vals`` until
+    they are handed to the combiner)."""
 
     vals: dict    # chunk index -> value
     compile_s: float = 0.0
     insns: int = 0
     batched: int = 0
+    dispatches: int = 0
     degraded: int = 0
     read_s: float = 0.0
+    read_wait_s: float = 0.0
+    stage_s: float = 0.0
     compute_s: float = 0.0
-    overlap_s: float = 0.0
+    combine_s: float = 0.0
     hits: int = 0
     misses: int = 0
 
-    def merge(self, other: "_DeviceRun") -> None:
-        self.vals.update(other.vals)
-        self.compile_s += other.compile_s
-        self.insns += other.insns
-        self.batched += other.batched
-        self.degraded += other.degraded
-        self.read_s += other.read_s
-        self.compute_s += other.compute_s
-        self.overlap_s += other.overlap_s
-        self.hits += other.hits
-        self.misses += other.misses
+    def fold_result(self, result) -> None:
+        """Merge one per-chunk :func:`execute_extent` result's counters."""
+        self.compile_s += result.compile_seconds
+        self.insns += result.insns_executed
+        self.read_s += result.read_seconds
+        self.compute_s += result.exec_seconds
+        self.hits += result.cache_hits
+        self.misses += result.cache_misses
+
+
+@dataclass
+class _MemberRun:
+    """One coalesced member read of a batch group: ``items`` are
+    ``(row, chunk)`` pairs (row = slot in the group's batch buffer),
+    ascending and contiguous in member-local space — ONE ring transfer."""
+
+    device: int
+    items: list
+    fut: object
+
+
+@dataclass
+class _StageGroup:
+    """One batch group: the chunks that share one array-wide dispatch.
+
+    Member runs land into the shared ``pages`` staging buffer from their
+    ring completions (on the gather pool) — ``staged`` flips once every
+    surviving run has scattered its rows. A group whose single run already
+    covers every batch row in member order skips the buffer entirely
+    (``zero_copy``) and dispatches the device view directly."""
+
+    chunks: list
+    runs: list
+    pages: object = None           # staging buffer (None => zero-copy)
+    zero_copy: bool = False
+    pending: int = 0               # runs not yet landed
+    stage_s: float = 0.0           # memcpy time spent landing (gather pool)
+    lock: threading.Lock = field(default_factory=threading.Lock)
+    staged: threading.Event = field(default_factory=threading.Event)
+
+
+@dataclass
+class _StagedReads:
+    """Everything the READ stage put in flight, for the compute stage to
+    consume: batch groups (one array-wide dispatch each), per-chunk tail
+    reads, xor-reconstruction reads, and chunks whose member failed at
+    submission time (re-served through the degraded path)."""
+
+    groups: list = field(default_factory=list)
+    m_b: int = 0                   # padded batch width shared by all groups
+    rest: list = field(default_factory=list)      # (chunk, member fut)
+    recon: list = field(default_factory=list)     # (chunk, array fut)
+    fallback: list = field(default_factory=list)  # chunks to re-serve
+
+
+class _StagedCombiner:
+    """Order-preserving incremental combiner — the COMBINE stage.
+
+    Folds per-chunk partials strictly in logical stripe order as they land
+    (a cursor over the ready prefix), so the re-reduction is EXACTLY the
+    sequential fold the per-command combiner always did — Kahan float-SUM
+    compensation order included — keeping results bit-identical for every
+    array width and degraded mode. :meth:`feed` schedules folding on the
+    striping gather pool so combining overlaps the compute stage's next
+    dispatch; :meth:`result` is the final rendezvous.
+    """
+
+    def __init__(self, program: Program, n_parts: int):
+        self._program = program
+        self._n = n_parts
+        self._dtype = np.dtype(program.input_dtype)
+        self._pending: dict[int, object] = {}
+        self._next = 0
+        self._lock = threading.Lock()
+        self._done = threading.Event()
+        self._error: Optional[BaseException] = None
+        self.fold_seconds = 0.0
+        term = program.terminal.op
+        if term == OpCode.RED_COUNT:
+            self._count = 0
+        elif term == OpCode.RED_SUM:
+            self._widen = _SUM_WIDEN[self._dtype]
+            self._acc = self._widen(0)
+            self._comp = self._widen(0)   # Kahan compensation (float SUM)
+        elif term in (OpCode.RED_MIN, OpCode.RED_MAX):
+            self._acc = None
+        elif term == OpCode.RED_HIST:
+            self._acc = np.zeros(program.terminal.imm[2], np.int64)
+        elif term in (OpCode.SELECT, OpCode.SELECT_REC):
+            self._parts: list[np.ndarray] = []
+            self._filled = 0
+            self._total = 0
+        else:
+            raise AssertionError(term)
+        if n_parts == 0:
+            self._done.set()
+
+    def feed(self, parts: dict[int, object], *, inline: bool = False) -> None:
+        """Hand over ``{logical position: partial}``; the ready prefix folds
+        on the gather pool (or inline) as soon as it grows."""
+        with self._lock:
+            self._pending.update(parts)
+            runnable = self._next in self._pending
+        if not runnable:
+            return
+        if inline:
+            self._fold()
+        else:
+            _gather_executor().submit(self._fold)
+
+    def fail(self, e: BaseException) -> None:
+        """Poison the combine: a deferred batch materialization died before
+        it could feed its rows, so the rendezvous must raise, not hang."""
+        self._error = e
+        self._done.set()
+
+    def _fold(self) -> None:
+        done = True
+        t0 = time.perf_counter()
+        try:
+            with self._lock:
+                while self._next in self._pending:
+                    self._fold_one(self._pending.pop(self._next))
+                    self._next += 1
+                done = self._next == self._n
+                self.fold_seconds += time.perf_counter() - t0
+        except BaseException as e:  # surfaced at result(), never swallowed
+            self._error = e
+        if done:
+            self._done.set()
+
+    def _fold_one(self, v: object) -> None:
+        term = self._program.terminal.op
+        if term == OpCode.RED_COUNT:
+            self._count += int(v)
+        elif term == OpCode.RED_SUM:
+            widen = self._widen
+            if np.issubdtype(widen, np.floating):
+                # Kahan compensated accumulation over the per-chunk partials,
+                # in logical stripe order. The partials depend only on the
+                # chunk decomposition (stripe_blocks), not on how many
+                # devices the chunks landed on — so with compensation the
+                # re-reduction is bit-identical for every array width over
+                # the same logical data.
+                y = widen(np.asarray(v)[()]) - self._comp
+                t = widen(self._acc + y)
+                self._comp = widen((t - self._acc) - y)
+                self._acc = t
+            else:
+                self._acc = widen(self._acc + widen(np.asarray(v)[()]))
+        elif term == OpCode.RED_MIN:
+            x = np.asarray(v, self._dtype)[()]
+            self._acc = x if self._acc is None else np.minimum(self._acc, x)
+        elif term == OpCode.RED_MAX:
+            x = np.asarray(v, self._dtype)[()]
+            self._acc = x if self._acc is None else np.maximum(self._acc, x)
+        elif term == OpCode.RED_HIST:
+            self._acc += np.asarray(v, np.int64)
+        else:                       # SELECT / SELECT_REC
+            cap = self._program.select_capacity
+            buf, n = np.asarray(v[0]), int(v[1])
+            self._total += n
+            if self._filled < cap and n > 0:
+                take = min(n, cap, cap - self._filled)
+                self._parts.append(buf[:take])
+                self._filled += take
+
+    def result(self) -> object:
+        """Block for the last fold and return the combined terminal value."""
+        self._done.wait()
+        if self._error is not None:
+            raise self._error
+        term = self._program.terminal.op
+        if term == OpCode.RED_COUNT:
+            return np.int64(self._count)
+        if term == OpCode.RED_SUM:
+            return self._acc
+        if term in (OpCode.RED_MIN, OpCode.RED_MAX):
+            return self._dtype.type(self._acc)
+        if term == OpCode.RED_HIST:
+            return self._acc
+        cap = self._program.select_capacity
+        if term == OpCode.SELECT_REC:
+            stride = self._program.insns[0].imm[0]
+            out = np.zeros((cap, stride), self._dtype)
+        else:
+            out = np.zeros((cap,), self._dtype)
+        if self._parts:
+            cat = np.concatenate(self._parts, axis=0)
+            out[: cat.shape[0]] = cat
+        return out, np.int64(self._total)
 
 
 class _ExtentSource:
@@ -218,8 +419,12 @@ class OffloadScheduler:
         # surfaces as a diagnostic TimeoutError naming the stuck transfer
         # instead of stranding a worker forever (None = wait indefinitely)
         self.io_timeout_s = io_timeout_s
-        self._pool = concurrent.futures.ThreadPoolExecutor(
-            max_workers=max_workers or max(array.n_devices, 1))
+        # ``max_workers`` is the legacy thread-per-member fan-out knob,
+        # accepted for compatibility but no longer sized to the array: reads
+        # are ring-driven, compute is ONE dispatcher issuing array-wide
+        # batched calls, and combining rides the striping gather pool — the
+        # measured useful host parallelism, independent of member count
+        self.max_workers = max_workers
         # ONE cache for every tier and batch shape; programs are
         # device-agnostic so sharing (also across schedulers/CSDs, via the
         # ``cache`` argument) maximizes compile reuse
@@ -448,8 +653,11 @@ class OffloadScheduler:
         next to the cache and gather-pool series."""
         reg = _registry()
         reg.counter("offload.commands").inc()
+        reg.counter("offload.dispatches").inc(stats.n_dispatches)
         reg.histogram("offload.exec_seconds").observe(stats.exec_seconds)
         reg.histogram("offload.read_seconds").observe(stats.read_seconds)
+        reg.histogram("offload.read_wait_seconds").observe(
+            stats.read_wait_seconds)
         reg.histogram("offload.overlap_seconds").observe(stats.overlap_seconds)
         reg.gauge("offload.overlap_ratio").set(stats.overlap_ratio)
 
@@ -591,10 +799,11 @@ class OffloadScheduler:
         self._thread = None
 
     def close(self) -> None:
-        """Stop the dispatcher (if running) and release the fan-out worker
-        threads. The scheduler is unusable afterwards; the array is not."""
+        """Stop the dispatcher (if running). The staged pipeline owns no
+        worker pool — reads ride the completion ring and combining the
+        shared gather pool — so there is nothing else to release. The
+        scheduler is unusable afterwards; the array is not."""
         self.stop()
-        self._pool.shutdown(wait=True)
 
     def __enter__(self) -> "OffloadScheduler":
         return self
@@ -643,6 +852,25 @@ class OffloadScheduler:
 
     # ---------------------------------------------------------- execution
     def _execute(self, cmd: OffloadCommand) -> tuple[object, ArrayOffloadStats]:
+        """Three-stage offload pipeline.
+
+        1. **read stage** — every member transfer the plan needs goes in
+           flight on the completion ring UP FRONT: coalesced chunk-group
+           reads per member, tail-chunk reads, xor survivor reconstructions.
+           No thread parks per transfer; in-flight depth is bounded by the
+           emulated devices.
+        2. **compute stage** — ONE dispatcher consumes staged groups in
+           logical order and issues ONE array-wide batched compiled call per
+           group over the chunks of ALL members (total chunk count is a
+           property of the logical extent, so the dispatch shape — and the
+           host work — is constant across array widths). Tail, degraded and
+           fallback chunks ride the same staged bytes through the plain
+           per-chunk executables.
+        3. **combine stage** — the program-aware combiner folds per-chunk
+           partials in logical stripe order ON THE GATHER POOL as results
+           land, off the straggler's critical path; the stage span covers
+           only the final rendezvous.
+        """
         program, zone_id, tier = cmd.program, cmd.zone_id, cmd.tier
         array = self.array
         reg = _registry()
@@ -658,45 +886,37 @@ class OffloadScheduler:
                     f"offload failed: zone {zone_id} unrecoverable under "
                     f"{array.redundancy}: {e}"
                 ) from e
-            by_dev: dict[int, list[StripeChunk]] = {}
-            for c in chunks:
-                by_dev.setdefault(c.device, []).append(c)
         reg.histogram("sched.plan_seconds").observe(time.perf_counter() - t_p)
         if any(c.degraded for c in chunks):
             array.note_degraded_serving(zone_id)
+        n_members = len({c.device for c in chunks})
+        pos_of = {c.index: p for p, c in enumerate(chunks)}
 
         t0 = time.perf_counter()
-        with _trace.span("offload.fanout", devices=len(by_dev),
+        t_r = time.perf_counter()
+        with _trace.span("offload.stage.read", devices=n_members,
                          chunks=len(chunks)):
-            futures = {
-                self._pool.submit(self._run_device_chunks, d, zone_id,
-                                  dev_chunks, program, tier): d
-                for d, dev_chunks in by_dev.items()
-            }
-            per_chunk: dict[int, object] = {}
-            agg = _DeviceRun({})
-            errors: list[BaseException] = []
-            for fut in concurrent.futures.as_completed(futures):
-                try:
-                    run = fut.result()
-                except ArrayOffloadError as e:
-                    errors.append(e)
-                    continue
-                per_chunk.update(run.vals)
-                agg.merge(run)
-        reg.histogram("sched.fanout_seconds").observe(
-            time.perf_counter() - t0)
-        if errors:
-            raise errors[0]
+            staged = self._submit_stage_reads(zone_id, chunks, program, tier)
+        reg.histogram("sched.stage.read_seconds").observe(
+            time.perf_counter() - t_r)
+
+        agg = _StageAgg({})
+        combiner = _StagedCombiner(program, len(chunks))
+        t_x = time.perf_counter()
+        with _trace.span("offload.stage.compute", groups=len(staged.groups),
+                         chunks=len(chunks)):
+            self._compute_stage(cmd, staged, pos_of, agg, combiner)
+        reg.histogram("sched.stage.compute_seconds").observe(
+            time.perf_counter() - t_x)
 
         t_c = time.perf_counter()
-        with _trace.span("offload.combine"):
-            ordered = [per_chunk[c.index] for c in chunks]
-            value = self._combine(program, ordered)
-        reg.histogram("sched.combine_seconds").observe(
+        with _trace.span("offload.stage.combine"):
+            value = combiner.result()
+        agg.combine_s = combiner.fold_seconds
+        reg.histogram("sched.stage.combine_seconds").observe(
             time.perf_counter() - t_c)
         # keep exec and JIT time disjoint, as NvmCsd reports them (compiles
-        # happen inside the fan-out wall time on cache misses)
+        # happen inside the pipeline wall time on cache misses)
         exec_seconds = max(time.perf_counter() - t0 - agg.compile_s, 0.0)
 
         if isinstance(value, tuple):
@@ -712,104 +932,290 @@ class OffloadScheduler:
             bytes_returned=bytes_returned,
             jit_seconds=agg.compile_s, exec_seconds=exec_seconds,
             read_seconds=agg.read_s, compute_seconds=agg.compute_s,
-            overlap_seconds=agg.overlap_s,
+            read_wait_seconds=agg.read_wait_s, stage_seconds=agg.stage_s,
+            combine_seconds=agg.combine_s,
+            overlap_seconds=max(agg.read_s - agg.read_wait_s, 0.0),
             cache_hits=agg.hits, cache_misses=agg.misses,
-            n_devices=len(by_dev), n_chunks=len(chunks),
-            batched_chunks=agg.batched, degraded_reads=agg.degraded,
+            n_devices=n_members, n_chunks=len(chunks),
+            batched_chunks=agg.batched, n_dispatches=agg.dispatches,
+            degraded_reads=agg.degraded,
             tenant=cmd.tenant,
         )
         return value, stats
 
-    def _run_device_chunks(
-        self, dev_idx: int, zone_id: int, dev_chunks: list[StripeChunk],
-        program: Program, tier: str,
-    ) -> "_DeviceRun":
-        with _trace.span("worker.device", device=dev_idx,
-                         chunks=len(dev_chunks)):
-            return self._run_device_chunks_impl(
-                dev_idx, zone_id, dev_chunks, program, tier)
+    # ----------------------------------------------------------- read stage
+    def _submit_stage_reads(self, zone_id: int, chunks: list[StripeChunk],
+                            program: Program, tier: str) -> "_StagedReads":
+        """READ stage: classify the planned chunks and put every member
+        transfer in flight before any compute runs.
 
-    def _run_device_chunks_impl(
-        self, dev_idx: int, zone_id: int, dev_chunks: list[StripeChunk],
-        program: Program, tier: str,
-    ) -> "_DeviceRun":
-        """Execute one device's chunks (full-size chunks batched into one
-        compiled call on the jit/kernel tiers, the rest singly).
-
-        Chunks the array planner flagged ``reconstruct`` (their xor data
-        member is OFFLINE) never touch this device directly — they rebuild
-        through the array's degraded read and execute over the host buffer.
-        A chunk whose member dies BETWEEN planning and execution retries the
-        same way on redundant arrays; raid0 keeps the PR 2 clean-error
-        contract and degrades the whole offload."""
-        device = self.array.devices[dev_idx]
-        stripe = self.array.stripe_blocks
-        direct = [c for c in dev_chunks if not c.reconstruct]
-        recon = [c for c in dev_chunks if c.reconstruct]
+        Full-size chunks (jit/kernel tiers, more than one) form the batch
+        groups: consecutive logical chunks, bucketed to a power-of-two batch
+        width, each group's member shares coalesced into maximal contiguous
+        runs — ONE ring read per run (raid0/xor coalesce whole groups;
+        raid1's round-robin replica assignment is member-locally
+        discontiguous and degrades to per-chunk runs, all still in flight up
+        front). Tail chunks and xor reconstructions submit alongside. A
+        member that fails AT SUBMISSION parks its chunks on the fallback
+        list for the degraded re-serve (raid0 raises — the PR 2 clean-error
+        contract)."""
+        array = self.array
+        stripe = array.stripe_blocks
+        dtype = np.dtype(program.input_dtype)
+        direct = [c for c in chunks if not c.reconstruct]
+        recon = [c for c in chunks if c.reconstruct]
         full = [c for c in direct if c.n_blocks == stripe]
-        rest = [c for c in direct if c.n_blocks != stripe]
-        run = _DeviceRun({})
-        t_worker = time.perf_counter()
         # a single full chunk reuses the plain single-chunk executable
         # (shared with NvmCsd) instead of compiling a batch-of-1 variant
         if tier in (CsdTier.JIT, CsdTier.KERNEL) and len(full) > 1:
-            try:
-                run.merge(self._run_batched(device, zone_id, full, program,
-                                            tier))
-                run.insns += program.n_insns * len(full) * (
-                    stripe // self.pages_per_read)
-                run.batched += len(full)
-                run.degraded += sum(1 for c in full if c.degraded)
-            except (ZNSError, TransientIOError) as e:
-                # the member died mid-batch: re-run its chunks one by one so
-                # each can fall back to degraded reconstruction
-                self._member_failed(dev_idx, zone_id, e)
-                rest = full + rest
+            rest = [c for c in direct if c.n_blocks != stripe]
         else:
-            rest = full + rest
-        # every reconstruct chunk's survivor reads go in flight UP FRONT,
-        # BEFORE the direct-chunk execution loop: the ring elapses their
-        # emulated transfers under direct execution (exactly as _run_batched
-        # overlaps healthy group reads); execution consumes each as it
-        # retires
-        recon_futs = []
+            full, rest = [], direct
+        staged = _StagedReads()
+        if full:
+            m = len(full)
+            # Split into pipeline groups, then bucket the group size to a
+            # power of two and zero-pad the tail group, so compiles stay
+            # O(#programs x log(total chunks)) instead of one per distinct
+            # extent size; pad-row outputs are discarded at dispatch. Floor
+            # of 2: a batch-of-1 variant would duplicate the plain
+            # single-chunk executable at the cost of an extra XLA compile.
+            n_groups = max(min(self.prefetch_depth, m), 1)
+            staged.m_b = max(1 << (-(-m // n_groups) - 1).bit_length(), 2)
+            page_elems, chunk_pages = extent_geometry(
+                array.block_bytes, dtype, stripe, self.pages_per_read)
+            for i in range(0, m, staged.m_b):
+                grp_chunks = full[i:i + staged.m_b]
+                runs = []
+                for dev_idx, items in coalesce_member_runs(grp_chunks,
+                                                           stripe):
+                    n_blocks = sum(c.n_blocks for _, c in items)
+                    try:
+                        fut = array.devices[dev_idx].submit_read(
+                            zone_id, items[0][1].local_off, n_blocks,
+                            dtype=dtype)
+                    except (ZNSError, TransientIOError) as e:
+                        self._member_failed(dev_idx, zone_id, e)
+                        staged.fallback.extend(c for _, c in items)
+                        continue
+                    runs.append(_MemberRun(dev_idx, items, fut))
+                grp = _StageGroup(grp_chunks, runs)
+                one = runs[0] if len(runs) == 1 else None
+                if (one is not None and len(one.items) == staged.m_b
+                        and all(row == j
+                                for j, (row, _) in enumerate(one.items))):
+                    # the one run covers every batch row in member order
+                    # (the 1-member case): dispatch the device view as-is
+                    grp.zero_copy = True
+                    grp.staged.set()
+                else:
+                    # np.empty, not zeros: every served row is overwritten by
+                    # staging, and rows whose member read failed feed garbage
+                    # to batch outputs that are discarded — zero-filling
+                    # 2×stripe-width of pages here costs real dispatcher
+                    # milliseconds at 8 members
+                    grp.pages = np.empty(
+                        (staged.m_b, chunk_pages, page_elems), dtype)
+                    grp.pending = len(runs)
+                    if not runs:
+                        grp.staged.set()
+                    for run in runs:
+                        self._stage_on_land(grp, run, chunk_pages,
+                                            page_elems)
+                staged.groups.append(grp)
+        for c in rest:
+            try:
+                fut = array.devices[c.device].submit_read(
+                    zone_id, c.local_off, c.n_blocks)
+            except (ZNSError, TransientIOError) as e:
+                self._member_failed(c.device, zone_id, e)
+                staged.fallback.append(c)
+                continue
+            staged.rest.append((c, fut))
         for c in recon:
             try:
-                recon_futs.append(
-                    (c, self.array.submit_read(zone_id, c.logical_off,
-                                               c.n_blocks)))
+                staged.recon.append(
+                    (c, array.submit_read(zone_id, c.logical_off,
+                                          c.n_blocks)))
             except (ZNSError, TransientIOError) as e:
                 raise ArrayOffloadError(
                     f"offload failed: chunk {c.index} of zone {zone_id} is "
-                    f"unrecoverable under {self.array.redundancy}: {e}"
+                    f"unrecoverable under {array.redundancy}: {e}"
                 ) from e
-        for c in rest:
+        return staged
+
+    @staticmethod
+    def _stage_on_land(grp: "_StageGroup", run: "_MemberRun",
+                       chunk_pages: int, page_elems: int) -> None:
+        """Scatter one member run into the group's staging buffer the moment
+        its ring completion retires — on the gather pool, never the reactor
+        thread — so staging memcpys hide under the remaining members'
+        transfers and the previous group's dispatch instead of serializing
+        on the dispatcher's critical path."""
+        def copy():
+            t0 = time.perf_counter()
             try:
-                result = execute_extent(
-                    device, program, zone_id, c.local_off, c.n_blocks,
-                    tier=tier, pages_per_read=self.pages_per_read,
-                    cache=self.cache, prefetch_depth=self.prefetch_depth,
-                )
-            except (ZNSError, TransientIOError) as e:
-                self._member_failed(dev_idx, zone_id, e)
-                self._run_chunk_degraded(zone_id, c, program, tier, run)
+                if run.fut.error is None:
+                    part = np.asarray(run.fut.value).reshape(
+                        len(run.items), chunk_pages, page_elems)
+                    for j, (row, _c) in enumerate(run.items):
+                        grp.pages[row] = part[j]
+            finally:
+                with grp.lock:
+                    grp.stage_s += time.perf_counter() - t0
+                    grp.pending -= 1
+                    if grp.pending == 0:
+                        grp.staged.set()
+        # Always hop to the gather pool: the callback fires inline on the
+        # DISPATCHER thread when a short emulated transfer retires before
+        # registration, and an inline memcpy there serializes all staging
+        # into the read-submission loop — the exact cliff this stage hides.
+        run.fut.add_done_callback(lambda _f: _gather_executor().submit(copy))
+
+    # -------------------------------------------------------- compute stage
+    def _compute_stage(self, cmd: OffloadCommand, staged: "_StagedReads",
+                       pos_of: dict[int, int], agg: "_StageAgg",
+                       combiner: "_StagedCombiner") -> None:
+        """COMPUTE stage: one dispatcher thread drains the staged reads in
+        logical order and issues one array-wide batched compiled call per
+        group; every partial is handed to the combiner the moment it exists,
+        so combining overlaps the next group's read wait and dispatch.
+
+        A ``TransientIOError`` surfacing on one member's group read does NOT
+        poison the batch: the surviving runs still stage and dispatch
+        together (the dead member's rows stay unstaged and their outputs
+        are discarded), and the failed member's chunks re-serve individually
+        through the array's degraded read — raid1 mirror redirect / xor
+        reconstruction, the exact observable behavior of the pre-staged
+        per-worker fallback."""
+        program, zone_id, tier = cmd.program, cmd.zone_id, cmd.tier
+        array = self.array
+        reg = _registry()
+        stripe = array.stripe_blocks
+
+        def serve_degraded(c: StripeChunk, fut=None) -> None:
+            with _trace.span("stage.serve_chunk", chunk=c.index,
+                             degraded=True):
+                self._run_chunk_degraded(zone_id, c, program, tier, agg,
+                                         fut=fut)
+            combiner.feed({pos_of[c.index]: agg.vals.pop(c.index)})
+
+        if staged.groups:
+            m_b = staged.m_b
+            dtype = np.dtype(program.input_dtype)
+            page_elems, chunk_pages = extent_geometry(
+                array.block_bytes, dtype, stripe, self.pages_per_read)
+            if tier == CsdTier.KERNEL:
+                from repro.kernels.zone_filter import ops as zf_ops
+                key = ("kernel_batched", program, m_b, chunk_pages,
+                       page_elems)
+                builder = lambda: zf_ops.kernel_program_batched(
+                    program, m_b, chunk_pages, page_elems)
+            else:
+                key = ("jit_batched", program, m_b, chunk_pages, page_elems)
+                builder = lambda: jit_program_batched(
+                    program, m_b, chunk_pages, page_elems)
+            jp, compile_s, hit = self.cache.get_or_build(key, builder)
+            agg.compile_s += compile_s
+            agg.hits += int(hit)
+            agg.misses += int(not hit)
+        for grp in staged.groups:
+            # read_wait = wall time the dispatcher BLOCKED on this group's
+            # ring completions and their staging (near zero when earlier
+            # groups' dispatch covered the transfers) — the number that
+            # grows if the pipeline serializes on I/O
+            served = []
+            raw0 = None
+            t_w = time.perf_counter()
+            with _trace.span("stage.read_wait", chunks=len(grp.chunks)):
+                for run in grp.runs:
+                    try:
+                        raw0 = run.fut.result(self.io_timeout_s)
+                    except (ZNSError, TransientIOError) as e:
+                        self._member_failed(run.device, zone_id, e)
+                        staged.fallback.extend(c for _, c in run.items)
+                        continue
+                    agg.read_s += run.fut.service_seconds
+                    served.extend(run.items)
+                if not grp.staged.wait(self.io_timeout_s):
+                    raise TimeoutError(
+                        f"offload staging stalled on zone {zone_id}: "
+                        f"{grp.pending} member runs never landed "
+                        f"(gather pool wedged?)")
+            dt = time.perf_counter() - t_w
+            agg.read_wait_s += dt
+            reg.histogram("sched.stage.read_wait_seconds").observe(dt)
+            if not served:
                 continue
+            with _trace.span("stage.staging", chunks=len(served)):
+                if grp.zero_copy:
+                    pages = np.asarray(raw0).reshape(m_b, chunk_pages,
+                                                     page_elems)
+                else:
+                    pages = grp.pages
+            agg.stage_s += grp.stage_s
+            reg.histogram("sched.stage.staging_seconds").observe(grp.stage_s)
+            t_d = time.perf_counter()
+            with _trace.span("stage.dispatch", chunks=len(served)):
+                out = jp(pages)
+            dt = time.perf_counter() - t_d
+            agg.compute_s += dt
+            agg.dispatches += 1
+            reg.histogram("sched.stage.dispatch_seconds").observe(dt)
+            agg.batched += len(served)
+            agg.degraded += sum(1 for _, c in served if c.degraded)
+            # Materialize the batch output OFF the dispatcher: np.asarray on
+            # the lazy jax result blocks until XLA finishes, and paying that
+            # here would serialize group k's compute ahead of group k+1's
+            # read wait and dispatch — the pool thread eats the wait instead,
+            # then feeds the combiner its rows in one go.
+            rows = [(row, pos_of[c.index]) for row, c in served]
+
+            def land(out=out, rows=rows):
+                try:
+                    with _trace.span("stage.materialize", rows=len(rows)):
+                        if isinstance(out, tuple):
+                            bufs, ns = (np.asarray(v) for v in out)
+                            vals = {pos: (bufs[row], ns[row])
+                                    for row, pos in rows}
+                        else:
+                            o = np.asarray(out)
+                            vals = {pos: o[row] for row, pos in rows}
+                    combiner.feed(vals)
+                except BaseException as e:
+                    combiner.fail(e)
+
+            _gather_executor().submit(land)
+        if staged.groups:
+            agg.insns += program.n_insns * agg.batched * (
+                stripe // self.pages_per_read)
+
+        for c, fut in staged.rest:
+            t_w = time.perf_counter()
+            try:
+                flat = np.asarray(fut.result(self.io_timeout_s))
+            except (ZNSError, TransientIOError) as e:
+                agg.read_wait_s += time.perf_counter() - t_w
+                self._member_failed(c.device, zone_id, e)
+                serve_degraded(c)
+                continue
+            agg.read_wait_s += time.perf_counter() - t_w
+            agg.read_s += fut.service_seconds
+            with _trace.span("stage.serve_chunk", chunk=c.index):
+                src = _ExtentSource(array.block_bytes, c.local_off, flat)
+                result = execute_extent(
+                    src, program, zone_id, c.local_off, c.n_blocks,
+                    tier=tier, pages_per_read=self.pages_per_read,
+                    cache=self.cache, prefetch_depth=0,
+                )
             if c.degraded:
-                run.degraded += 1
-            run.vals[c.index] = result.value
-            run.compile_s += result.compile_seconds
-            run.insns += result.insns_executed
-            run.read_s += result.read_seconds
-            run.compute_s += result.exec_seconds
-            run.hits += result.cache_hits
-            run.misses += result.cache_misses
-        for c, fut in recon_futs:
-            self._run_chunk_degraded(zone_id, c, program, tier, run, fut=fut)
-        # overlap WITHIN this worker: transfer+compute time that exceeded the
-        # worker's own wall clock must have run concurrently (the prefetcher)
-        wall = time.perf_counter() - t_worker - run.compile_s
-        run.overlap_s = max(run.read_s + run.compute_s - max(wall, 0.0), 0.0)
-        return run
+                agg.degraded += 1
+            agg.fold_result(result)
+            combiner.feed({pos_of[c.index]: result.value})
+        for c, fut in staged.recon:
+            serve_degraded(c, fut=fut)
+        for c in staged.fallback:
+            serve_degraded(c)
 
     def _member_failed(self, dev_idx: int, zone_id: int,
                    e: Exception) -> None:
@@ -824,7 +1230,7 @@ class OffloadScheduler:
 
     def _run_chunk_degraded(self, zone_id: int, c: StripeChunk,
                             program: Program, tier: str,
-                            run: "_DeviceRun", *,
+                            agg: "_StageAgg", *,
                             fut=None) -> None:
         """Execute one chunk whose member cannot serve it: rebuild the bytes
         through the array's degraded read (raid1 mirror redirect / xor
@@ -832,6 +1238,7 @@ class OffloadScheduler:
         SAME execution tier over the host buffer — bit-identical results by
         construction. Pass a pre-submitted ``fut`` to overlap many chunks'
         reconstruction transfers (the planned-degraded fan-out does)."""
+        t_w = time.perf_counter()
         try:
             if fut is None:
                 fut = self.array.submit_read(zone_id, c.logical_off,
@@ -842,191 +1249,26 @@ class OffloadScheduler:
                 f"offload failed: chunk {c.index} of zone {zone_id} is "
                 f"unrecoverable under {self.array.redundancy}: {e}"
             ) from e
+        finally:
+            agg.read_wait_s += time.perf_counter() - t_w
         src = _ExtentSource(self.array.block_bytes, c.local_off, flat)
         result = execute_extent(
             src, program, zone_id, c.local_off, c.n_blocks,
             tier=tier, pages_per_read=self.pages_per_read,
             cache=self.cache, prefetch_depth=0,
         )
-        run.vals[c.index] = result.value
-        run.compile_s += result.compile_seconds
-        run.insns += result.insns_executed
-        run.read_s += result.read_seconds + fut.service_seconds
-        run.compute_s += result.exec_seconds
-        run.hits += result.cache_hits
-        run.misses += result.cache_misses
-        run.degraded += 1
-
-    def _run_batched(
-        self, device, zone_id: int, full: list[StripeChunk], program: Program,
-        tier: str,
-    ) -> "_DeviceRun":
-        """Execute all full-size chunks of one device through batched compiled
-        calls — ONE vmapped XLA call (jit tier) or ONE grid-batched Pallas
-        call (kernel tier) per chunk group. Full chunks of a device are
-        contiguous in member-local space, so one read covers each group.
-
-        Read/compute overlap rides the completion ring: EVERY group's device
-        read is submitted up front (the zone's virtual-time queue serializes
-        their emulated transfers in order), so group ``g+1``'s transfer
-        elapses while group ``g`` executes — in-flight depth is the number of
-        groups, with no prefetch pool and no thread parked per read.
-
-        raid0/xor full chunks of one device are contiguous in member-local
-        space, so ONE read covers each group; raid1's round-robin replica
-        assignment interleaves the mirror pair by row, so a group may be
-        member-locally discontiguous — those groups read per chunk (all
-        still in flight up front) and stack for the one compiled call.
-        """
-        stripe = self.array.stripe_blocks
-        dtype = np.dtype(program.input_dtype)
-        page_elems, chunk_pages = extent_geometry(
-            self.array.block_bytes, dtype, stripe, self.pages_per_read)
-        m = len(full)
-        # Split into overlap groups, then bucket the group size to a
-        # power of two and zero-pad the tail group, so compiles stay
-        # O(#programs x log(max chunks/device)) instead of one per distinct
-        # per-device chunk count; pad-row outputs are discarded below. Floor
-        # of 2: a batch-of-1 variant would duplicate the plain single-chunk
-        # executable (the degenerate case _run_device_chunks already routes
-        # around) at the cost of an extra XLA compile.
-        n_groups = max(min(self.prefetch_depth, m), 1)
-        m_b = max(1 << (-(-m // n_groups) - 1).bit_length(), 2)
-        groups = [full[i:i + m_b] for i in range(0, m, m_b)]
-
-        run = _DeviceRun({})
-
-        def group_read(g: list[StripeChunk]):
-            contiguous = all(g[i + 1].local_off == g[i].local_off + stripe
-                             for i in range(len(g) - 1))
-            if contiguous:
-                return device.submit_read(zone_id, g[0].local_off,
-                                          len(g) * stripe, dtype=dtype)
-            return [device.submit_read(zone_id, c.local_off, stripe,
-                                       dtype=dtype) for c in g]
-
-        futs = [group_read(g) for g in groups]
-        if tier == CsdTier.KERNEL:
-            from repro.kernels.zone_filter import ops as zf_ops
-            key = ("kernel_batched", program, m_b, chunk_pages, page_elems)
-            builder = lambda: zf_ops.kernel_program_batched(
-                program, m_b, chunk_pages, page_elems)
-        else:
-            key = ("jit_batched", program, m_b, chunk_pages, page_elems)
-            builder = lambda: jit_program_batched(
-                program, m_b, chunk_pages, page_elems)
-        jp, compile_s, hit = self.cache.get_or_build(key, builder)
-        run.compile_s += compile_s
-        run.hits += int(hit)
-        run.misses += int(not hit)
-
-        reg = _registry()
-        for group, fut in zip(groups, futs):
-            # read_wait = wall time this worker BLOCKED on the group's ring
-            # completion (zero when earlier groups' execution covered the
-            # transfer) — the number that grows if fan-out serializes on I/O
-            t_w = time.perf_counter()
-            with _trace.span("worker.read_wait", group=len(group)):
-                if isinstance(fut, list):
-                    raws = [f.result(self.io_timeout_s) for f in fut]
-                    run.read_s += sum(f.service_seconds for f in fut)
-                else:
-                    raw = fut.result(self.io_timeout_s)
-                    # emulated transfer time of this group (the time the ring
-                    # hid under earlier groups' execution; same meaning the
-                    # thread-backed fetch wall-clock had)
-                    run.read_s += fut.service_seconds
-            reg.histogram("sched.worker.read_wait_seconds").observe(
-                time.perf_counter() - t_w)
-            t_s = time.perf_counter()
-            with _trace.span("worker.stage"):
-                if isinstance(fut, list):
-                    pages = np.stack([r.reshape(chunk_pages, page_elems)
-                                      for r in raws])
-                else:
-                    pages = raw.reshape(len(group), chunk_pages, page_elems)
-                if len(group) != m_b:
-                    pages = np.concatenate(
-                        [pages, np.zeros((m_b - len(group), chunk_pages,
-                                          page_elems), dtype)])
-            reg.histogram("sched.worker.stage_seconds").observe(
-                time.perf_counter() - t_s)
-            t0 = time.perf_counter()
-            with _trace.span("worker.compute", group=len(group)):
-                out = jp(pages)
-            if isinstance(out, tuple):
-                bufs, ns = (np.asarray(v) for v in out)
-                for i, c in enumerate(group):
-                    run.vals[c.index] = (bufs[i], ns[i])
-            else:
-                out = np.asarray(out)
-                for i, c in enumerate(group):
-                    run.vals[c.index] = out[i]
-            dt = time.perf_counter() - t0
-            run.compute_s += dt
-            reg.histogram("sched.worker.compute_seconds").observe(dt)
-        return run
+        agg.vals[c.index] = result.value
+        agg.fold_result(result)
+        agg.read_s += fut.service_seconds
+        agg.degraded += 1
 
     # ----------------------------------------------------------- combiner
     def _combine(self, program: Program, ordered: list[object]) -> object:
         """Re-reduce per-chunk results in logical stripe order — the
-        scatter-gather step. Semantics match :func:`repro.core.vm.run_oracle`
-        over the concatenated logical stream."""
-        term = program.terminal.op
-        dtype = np.dtype(program.input_dtype)
-        if term == OpCode.RED_COUNT:
-            return np.int64(sum(int(v) for v in ordered))
-        if term == OpCode.RED_SUM:
-            widen = _SUM_WIDEN[dtype]
-            if np.issubdtype(widen, np.floating):
-                # Kahan compensated accumulation over the per-chunk partials,
-                # in logical stripe order. The partials themselves depend only
-                # on the chunk decomposition (stripe_blocks), not on how many
-                # devices the chunks landed on — so with compensation the
-                # re-reduction is bit-identical for every array width over
-                # the same logical data.
-                acc = widen(0)
-                comp = widen(0)
-                for v in ordered:
-                    y = widen(np.asarray(v)[()]) - comp
-                    t = widen(acc + y)
-                    comp = widen((t - acc) - y)
-                    acc = t
-                return acc
-            acc = widen(0)
-            for v in ordered:
-                acc = widen(acc + widen(np.asarray(v)[()]))
-            return acc
-        if term == OpCode.RED_MIN:
-            return dtype.type(np.minimum.reduce(
-                [np.asarray(v, dtype)[()] for v in ordered]))
-        if term == OpCode.RED_MAX:
-            return dtype.type(np.maximum.reduce(
-                [np.asarray(v, dtype)[()] for v in ordered]))
-        if term == OpCode.RED_HIST:
-            acc = np.zeros(program.terminal.imm[2], np.int64)
-            for v in ordered:
-                acc += np.asarray(v, np.int64)
-            return acc
-        if term in (OpCode.SELECT, OpCode.SELECT_REC):
-            cap = program.select_capacity
-            parts: list[np.ndarray] = []
-            filled = 0
-            total = 0
-            for v in ordered:
-                buf, n = np.asarray(v[0]), int(v[1])
-                total += n
-                if filled < cap and n > 0:
-                    take = min(n, cap, cap - filled)
-                    parts.append(buf[:take])
-                    filled += take
-            if term == OpCode.SELECT_REC:
-                stride = program.insns[0].imm[0]
-                out = np.zeros((cap, stride), dtype)
-            else:
-                out = np.zeros((cap,), dtype)
-            if parts:
-                cat = np.concatenate(parts, axis=0)
-                out[: cat.shape[0]] = cat
-            return out, np.int64(total)
-        raise AssertionError(term)
+        scatter-gather step, as one inline fold. Semantics match
+        :func:`repro.core.vm.run_oracle` over the concatenated logical
+        stream; the staged pipeline streams the same fold incrementally
+        through :class:`_StagedCombiner`."""
+        comb = _StagedCombiner(program, len(ordered))
+        comb.feed(dict(enumerate(ordered)), inline=True)
+        return comb.result()

@@ -71,7 +71,8 @@ from repro.zns.ring import (
     in_reactor_thread,
 )
 
-__all__ = ["StripedZoneArray", "LogicalZone", "StripeChunk", "REDUNDANCY_MODES"]
+__all__ = ["StripedZoneArray", "LogicalZone", "StripeChunk",
+           "REDUNDANCY_MODES", "coalesce_member_runs"]
 
 REDUNDANCY_MODES = ("raid0", "raid1", "xor")
 
@@ -210,6 +211,39 @@ class StripeChunk:
              " reconstruct" if self.reconstruct else ""])
         return (f"StripeChunk(#{self.index} dev{self.device} "
                 f"local[{self.local_off},+{self.n_blocks}){flags})")
+
+
+def coalesce_member_runs(
+        chunks: Sequence[StripeChunk],
+        stripe_blocks: int) -> list[tuple[int, list[tuple[int, StripeChunk]]]]:
+    """Group ``chunks`` by member and split each member's share into maximal
+    member-locally CONTIGUOUS runs — ``[(device, [(position, chunk), ...])]``
+    where ``position`` is the chunk's index within the input sequence.
+
+    One run is one device read: raid0/xor full chunks of a member are
+    consecutive multiples of ``stripe_blocks`` apart so whole groups coalesce
+    into a single transfer, while raid1's round-robin replica assignment
+    leaves row-sized holes in member-local space and degrades to per-chunk
+    runs. Layout-agnostic on purpose — the scheduler's staged read phase uses
+    it for every redundancy mode, so a future placement scheme cannot
+    silently break the fan-out's coalescing.
+    """
+    by_dev: dict[int, list[tuple[int, StripeChunk]]] = {}
+    for pos, c in enumerate(chunks):
+        by_dev.setdefault(c.device, []).append((pos, c))
+    runs: list[tuple[int, list[tuple[int, StripeChunk]]]] = []
+    for dev in sorted(by_dev):
+        items = sorted(by_dev[dev], key=lambda pc: pc[1].local_off)
+        run = [items[0]]
+        for pc in items[1:]:
+            prev = run[-1][1]
+            if pc[1].local_off == prev.local_off + prev.n_blocks:
+                run.append(pc)
+            else:
+                runs.append((dev, run))
+                run = [pc]
+        runs.append((dev, run))
+    return runs
 
 
 class _DirectRead:

@@ -19,7 +19,7 @@ Design constraints from the hot path:
     taken once per thread at buffer registration). Overflow overwrites the
     oldest events and counts drops — tracing must never stall the reactor.
   * **nesting without frames** — a contextvar stack carries the parent
-    span's tags, so a ``worker.read_wait`` span inside ``offload.execute``
+    span's tags, so a ``stage.read_wait`` span inside ``offload.execute``
     inherits tenant/device tags it never set; contextvars also follow the
     code into coroutine-style callbacks better than thread-locals would.
 

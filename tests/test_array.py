@@ -633,4 +633,74 @@ def test_scheduler_multi_tenant_stats_history():
     assert len(sched.history) == 2
     assert {s.program for s in sched.history} == {
         "filter_count_gt", "filter_count_lt"}
+
+
+# ------------------------- staged-pipeline stats + fault seams (ISSUE 10)
+
+def test_offload_stats_report_per_stage_figures():
+    """The pipelined path decomposes its wall time per STAGE (read wait /
+    staging / combine) and counts batched dispatches — the per-worker
+    fanout/overlap accounting is gone."""
+    _, sched = oracle_pair(40)
+    stats = sched.nvm_cmd_bpf_run(filter_count("int32", "gt", 0), 0)
+    assert stats.n_dispatches >= 1
+    assert stats.read_wait_seconds >= 0.0
+    assert stats.stage_seconds >= 0.0
+    assert stats.combine_seconds >= 0.0
+    assert 0.0 <= stats.overlap_ratio <= 1.0
+    # fanout names the array-wide batched dispatches, not a worker pool
+    assert "dispatches" in stats.fanout
+    assert f"{stats.n_chunks} chunks" in stats.fanout
+    assert f"{stats.n_devices} devices" in stats.fanout
+
+
+def test_array_statsview_dict_api_unchanged_by_pipeline():
+    """Regression: the dict-shaped stats surfaces survive the staged
+    refactor — same keys before/after an offload, mapping semantics on the
+    device-level StatsView, integer values throughout."""
+    arr = make_array(4)
+    arr.zone_append(0, int32_blocks(40))
+    keys_before = set(arr.stats)
+    with OffloadScheduler(arr) as sched:
+        sched.nvm_cmd_bpf_run(filter_count("int32", "gt", 0), 0)
+    after = arr.stats
+    assert set(after) == keys_before
+    for key in ("blocks_read", "bytes_copied", "bytes_viewed",
+                "degraded_reads", "read_errors"):
+        assert key in after
+    assert all(isinstance(v, (int, np.integer)) for v in after.values())
+    view = arr.devices[0].stats
+    assert view["blocks_read"] == dict(view)["blocks_read"]
+    assert len(view) == len(list(view))
+
+
+@pytest.mark.parametrize("mode,n", [("raid0", 4), ("raid1", 4), ("xor", 3)])
+@pytest.mark.parametrize("tier", [CsdTier.JIT, CsdTier.KERNEL])
+def test_batched_dispatch_bit_identical_across_tiers_and_modes(mode, n, tier):
+    """The array-wide batched dispatch must return byte-identical answers
+    to the single-device oracle at every redundancy mode and compiled tier,
+    healthy AND with a member down (degraded chunks ride the same staged
+    path) — raid0 has no redundancy, so only the healthy half applies."""
+    data = int32_blocks(64, seed=21)
+    dev = ZonedDevice(num_zones=2, zone_bytes=1024 * 1024, block_bytes=BLOCK)
+    dev.zone_append(0, data)
+    csd = NvmCsd(dev)
+    arr = make_array(n, redundancy=mode, zone_kib=1024)
+    arr.zone_append(0, data)
+    sched = OffloadScheduler(arr)
+    for program in (filter_count("int32", "gt", 0),
+                    filter_sum("int32", "lt", 100)):
+        want, _ = csd.run_and_fetch(program, 0, tier=tier)
+        got, stats = sched.run_and_fetch(program, 0, tier=tier)
+        assert np.array_equal(np.asarray(want), np.asarray(got))
+        assert stats.batched_chunks > 0
+        if mode != "raid0":
+            arr.set_offline(0, device=0)
+            degraded, d_stats = sched.run_and_fetch(program, 0, tier=tier)
+            assert np.array_equal(np.asarray(want), np.asarray(degraded))
+            assert d_stats.degraded_reads > 0
+            for z in range(arr.num_zones):
+                arr.devices[0].zones[z].state = ZoneState.OPEN \
+                    if arr.devices[0].zones[z].write_pointer \
+                    else ZoneState.EMPTY
     assert all(s.movement_saved_bytes > 0 for s in sched.history)

@@ -24,8 +24,8 @@ import time
 import numpy as np
 import pytest
 
-from repro.array import OffloadScheduler, StripedZoneArray
-from repro.core import filter_count
+from repro.array import ArrayOffloadError, OffloadScheduler, StripedZoneArray
+from repro.core import CsdTier, filter_count, filter_sum
 from repro.faults import (FaultInjector, FaultSpec, IoTimeoutError,
                           RetryPolicy, TornAppendError, TransientIOError)
 from repro.faults.crash import CrashConsistencyError, PowerLossHarness
@@ -386,6 +386,64 @@ class TestOffloadUnderFaults:
         assert array.devices[0].stats["read_errors"] == 1
         assert event_log().snapshot(name="io.retry_exhausted",
                                     since_seq=seq0)
+
+    @pytest.mark.parametrize("mode,n", [("raid1", 4), ("xor", 3)])
+    @pytest.mark.parametrize("tier", [CsdTier.JIT, CsdTier.KERNEL])
+    def test_transient_mid_batch_reserves_member_bit_identical(
+            self, mode, n, tier):
+        """ISSUE 10 fault seam: a single member's read dying INSIDE the
+        array-wide batched dispatch must not poison the batch — the
+        surviving members' staged chunks still dispatch together, the dead
+        member's chunks re-serve individually through degraded
+        reconstruction (raid1 mirror / xor parity), and the answer stays
+        bit-identical to the fault-free run at both compiled tiers."""
+        array, data = _filled_array(n_dev=n, redundancy=mode)
+        programs = (filter_count("int32", "gt", RAND_MAX // 2),
+                    filter_sum("int32", "lt", RAND_MAX // 4))
+        with OffloadScheduler(array) as sched:
+            clean = [sched.run_and_fetch(p, 0, tier=tier)[0]
+                     for p in programs]
+            inj = FaultInjector(0)
+            inj.attach_array(array, policy=RetryPolicy(max_attempts=2,
+                                                       backoff_base_s=0.0))
+            for p, want in zip(programs, clean):
+                # member 0's next batched group read fails on BOTH budgeted
+                # attempts -> exhaustion surfaces mid-batch
+                seq = inj._seq.get((0, "read"), 0)
+                inj.force(0, "read", seq, "media")
+                inj.force(0, "read", seq + 1, "media")
+                got, st = sched.run_and_fetch(p, 0, tier=tier)
+                assert np.array_equal(np.asarray(want), np.asarray(got))
+                assert st.degraded_reads > 0
+                assert st.batched_chunks > 0   # survivors still batched
+        assert array.devices[0].stats["read_errors"] > 0
+
+    @pytest.mark.parametrize("tier", [CsdTier.JIT, CsdTier.KERNEL])
+    def test_raid0_transients_retry_inside_batch_bit_identical(self, tier):
+        """raid0 has no redundancy to re-serve from, so the same seam leans
+        on the retry policy alone: transient faults inside the batched
+        reads are absorbed below the scheduler and the answer is
+        bit-identical; only an EXHAUSTED budget escalates to the clean
+        aggregate failure."""
+        array, data = _filled_array(n_dev=4, redundancy="raid0")
+        expected = int((data > RAND_MAX // 2).sum())
+        program = filter_count("int32", "gt", RAND_MAX // 2)
+        inj = FaultInjector(33, FaultSpec(read_error_rate=0.2))
+        inj.attach_array(array, policy=RetryPolicy(max_attempts=6,
+                                                   backoff_base_s=0.0))
+        with OffloadScheduler(array) as sched:
+            for _ in range(3):
+                st = sched.nvm_cmd_bpf_run(program, 0)
+                assert int(sched.nvm_cmd_bpf_result()) == expected
+                assert st.degraded_reads == 0
+            assert sum(d.stats["retries"] for d in array.devices) > 0
+            # now exhaust member 0's budget mid-batch: no mirror, no parity
+            # -> the offload fails as an aggregate, loudly
+            seq = inj._seq.get((0, "read"), 0)
+            for k in range(6):
+                inj.force(0, "read", seq + k, "media")
+            with pytest.raises(ArrayOffloadError, match="degraded"):
+                sched.run_and_fetch(program, 0)
 
     def test_soft_counters_classify_suspect_not_degraded(self):
         d = _dev()
